@@ -1,0 +1,62 @@
+"""Backend comparison: numpy row-exact vs jnp masked vs Pallas fused kernel.
+
+CPU wall times for the jitted paths; the Pallas number is interpret-mode
+(correctness harness, not perf — the kernel's TPU perf story is the bytes
+model in EXPERIMENTS §Perf: one HBM pass instead of P)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (AdaptiveFilter, AdaptiveFilterConfig, OrderingConfig,
+                        pack, paper_filters_4)
+from repro.core import filter_exec, np_exec
+from repro.data.stream import gen_batch
+
+
+def main(rows: int = 262_144) -> None:
+    preds = paper_filters_4("fig1")
+    specs = pack(preds)
+    cols_np = gen_batch(0, 0, 0, rows)
+    cols = jnp.asarray(cols_np)
+    perm = jnp.arange(4, dtype=jnp.int32)
+
+    # numpy row-exact (compacted short-circuit)
+    t0 = time.perf_counter()
+    np_exec.run_chain_np(cols_np, preds, np.arange(4))
+    t_np = time.perf_counter() - t0
+    print(f"backends/numpy_compacted,{t_np*1e6/rows:.4f},row-exact")
+
+    # jnp masked (jitted, vectorized)
+    f = jax.jit(lambda c: filter_exec.run_chain(
+        c, specs, perm, collect_rate=1000, sample_phase=0))
+    f(cols).mask.block_until_ready()
+    t0 = time.perf_counter()
+    f(cols).mask.block_until_ready()
+    t_jnp = time.perf_counter() - t0
+    print(f"backends/jnp_masked,{t_jnp*1e6/rows:.4f},vectorized")
+
+    # pallas fused (interpret mode on CPU)
+    from repro.kernels.filter_chain.ops import filter_chain
+    g = jax.jit(lambda c: filter_chain(
+        c, specs, perm, collect_rate=1000, sample_phase=0))
+    g(cols).mask.block_until_ready()
+    t0 = time.perf_counter()
+    g(cols).mask.block_until_ready()
+    t_pl = time.perf_counter() - t0
+    print(f"backends/pallas_interpret,{t_pl*1e6/rows:.4f},correctness-mode")
+
+    # modeled TPU HBM traffic: unfused P passes vs fused single pass
+    c_bytes = 3 * 4  # f32 columns per row
+    unfused = (len(preds) + 1) * c_bytes   # read per predicate + mask write
+    fused = c_bytes + 1
+    print(f"backends/model_bytes_per_row,{0:.4f},"
+          f"unfused={unfused}B fused={fused}B ({unfused/fused:.1f}x)")
+
+
+if __name__ == "__main__":
+    main()

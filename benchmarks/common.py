@@ -1,0 +1,71 @@
+"""Shared benchmark engine for the paper-figure reproductions.
+
+All figure benches use the row-exact numpy backend (wall time genuinely
+tracks evaluation order, like Spark's generated code) and also report the
+deterministic row-level work-unit counter, so results are reproducible on
+any machine. Row counts scale with REPRO_BENCH_ROWS (default 1.5M — the
+paper's 75M-row runs use the same code path, just more batches).
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from repro.core import (AdaptiveFilter, AdaptiveFilterConfig, OrderingConfig,
+                        paper_filters_4, static_filter)
+from repro.data.stream import DriftConfig, gen_batch
+
+BENCH_ROWS = int(os.environ.get("REPRO_BENCH_ROWS", 1_500_000))
+BATCH_ROWS = 65536
+
+
+def stream_batches(rows: int, drift: DriftConfig, seed: int = 0):
+    n_batches = max(1, rows // BATCH_ROWS)
+    for b in range(n_batches):
+        yield gen_batch(seed, b, b * BATCH_ROWS, BATCH_ROWS, drift)
+
+
+def run_workload(preds, *, adaptive: bool, order=None,
+                 ordering: OrderingConfig | None = None,
+                 drift: DriftConfig = DriftConfig(),
+                 rows: int = None, cost_mode: str = "measured",
+                 seed: int = 0) -> dict:
+    """Process the stream; returns wall seconds, work units, rows, perm."""
+    rows = rows or BENCH_ROWS
+    if adaptive:
+        filt = AdaptiveFilter(preds, AdaptiveFilterConfig(
+            ordering=ordering or OrderingConfig(),
+            backend="numpy", cost_mode=cost_mode))
+    else:
+        filt = static_filter(preds, order=order, backend="numpy")
+
+    work = tail_work = 0.0
+    n = tail_n = passed = 0
+    perm = None
+    warmup_rows = rows // 3          # first epoch(s): user order still active
+    t0 = time.perf_counter()
+    for _, mask, metrics in filt.process_stream(
+            stream_batches(rows, drift, seed)):
+        work += metrics["work_units"]
+        n += len(mask)
+        passed += metrics["n_pass"]
+        perm = metrics["perm"]
+        if n > warmup_rows:
+            tail_work += metrics["work_units"]
+            tail_n += len(mask)
+    wall = time.perf_counter() - t0
+    return {"wall_s": wall, "work_units": work, "rows": n,
+            "passed": passed, "final_perm": perm,
+            "tail_work_units": tail_work, "tail_rows": tail_n,
+            "us_per_row": wall * 1e6 / max(n, 1)}
+
+
+def emit(name: str, res: dict, derived=None) -> str:
+    """One CSV row: name,us_per_call,derived (us_per_call = µs/row)."""
+    d = derived if derived is not None else f"work={res['work_units']:.0f}"
+    line = f"{name},{res['us_per_row']:.4f},{d}"
+    print(line, flush=True)
+    return line

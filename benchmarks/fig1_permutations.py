@@ -1,0 +1,70 @@
+"""Figure 1: adaptive vs EVERY static ordering (24 permutations of the
+4-predicate chain, overall selectivity 4.51%).
+
+Paper's claims to reproduce:
+  (1) the best/worst static orders differ by ~2.3×;
+  (2) the adaptive operator lands close to the best static order from ANY
+      initial (user) order — >2× better than bad orders, low overhead.
+
+We run the stationary stream the paper used for this figure, plus a drifted
+variant (the case the technique exists for) where adaptive beats even the
+best static order. ``--strategy agreedy`` additionally runs the
+conditional-selectivity extension (beyond-paper, DESIGN §3).
+"""
+
+from __future__ import annotations
+
+import itertools
+
+from repro.core import OrderingConfig, paper_filters_4
+from repro.data.stream import DriftConfig
+
+from benchmarks.common import emit, run_workload
+
+
+def main(drift_kind: str = "none") -> dict:
+    preds = paper_filters_4("fig1")
+    drift = DriftConfig(kind=drift_kind, period_rows=750_000, amplitude=1.5)
+    ordering = OrderingConfig(collect_rate=1000, calculate_rate=200_000,
+                              momentum=0.3)
+
+    results = {}
+    for perm in itertools.permutations(range(4)):
+        name = "".join(map(str, perm))
+        res = run_workload(preds, adaptive=False, order=list(perm),
+                           drift=drift)
+        results[name] = res
+        emit(f"fig1/{drift_kind}/static_{name}", res)
+
+    # adaptive from several initial orders (robustness claim)
+    for init in ((0, 1, 2, 3), (3, 2, 1, 0), (3, 0, 2, 1)):
+        name = "".join(map(str, init))
+        shuffled = [preds[i] for i in init]
+        res = run_workload(shuffled, adaptive=True, ordering=ordering,
+                           drift=drift)
+        results[f"adaptive_{name}"] = res
+        emit(f"fig1/{drift_kind}/adaptive_init_{name}", res,
+             derived=f"work={res['work_units']:.0f};perm={res['final_perm']}")
+
+    statics = {k: v for k, v in results.items() if not k.startswith("adapt")}
+    best = min(statics.values(), key=lambda r: r["work_units"])
+    worst = max(statics.values(), key=lambda r: r["work_units"])
+    ad = [v for k, v in results.items() if k.startswith("adapt")]
+    spread = worst["work_units"] / best["work_units"]
+    ad_worst = max(a["work_units"] for a in ad)
+    # steady state (post-warmup): the paper's regime — its 1M-row epochs are
+    # 1.3% of the 75M-row stream; our scaled epochs are 13%, so total work
+    # includes a visible user-order warmup that the paper's setting amortizes
+    ss = max(a["tail_work_units"] for a in ad) /         min(v["tail_work_units"] for v in statics.values())
+    print(f"# fig1[{drift_kind}] static spread={spread:.2f}x "
+          f"(paper: 2.3x); adaptive/best total={ad_worst/best['work_units']:.3f} "
+          f"steady-state={ss:.3f}; adaptive/worst="
+          f"{ad_worst/worst['work_units']:.3f}")
+    return {"spread": spread, "results": results,
+            "adaptive_over_best": ad_worst / best["work_units"],
+            "steady_state_over_best": ss}
+
+
+if __name__ == "__main__":
+    main("none")
+    main("regime")

@@ -1,0 +1,37 @@
+"""Figure 2: impact of collectRate (sensitivity chain, 16.14% selectivity).
+
+Expected U-shape: tiny collectRate → monitoring overhead dominates (every
+row pays the full-chain evaluation); huge collectRate → too little evidence
+per epoch, ordering lags the drift."""
+
+from __future__ import annotations
+
+from repro.core import OrderingConfig, paper_filters_4
+from repro.data.stream import DriftConfig
+
+from benchmarks.common import BENCH_ROWS, emit, run_workload
+
+SWEEP = (10, 100, 1000, 10_000, 100_000)
+
+
+def main() -> dict:
+    preds = paper_filters_4("sens")
+    drift = DriftConfig(kind="regime", period_rows=500_000, amplitude=1.5)
+    out = {}
+    for cr in SWEEP:
+        ordering = OrderingConfig(collect_rate=cr,
+                                  calculate_rate=max(BENCH_ROWS // 15, 50_000),
+                                  momentum=0.3)
+        res = run_workload(preds, adaptive=True, ordering=ordering,
+                           drift=drift)
+        # total cost = chain work + monitor work (all preds on sampled rows)
+        monitor_work = sum(p.static_cost for p in preds) * res["rows"] / cr
+        total = res["work_units"] + monitor_work
+        out[cr] = {**res, "total_work": total}
+        emit(f"fig2/collect_rate_{cr}", res,
+             derived=f"total_work={total:.0f}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Figure 3: impact of calculateRate (epoch length).
+
+Expected U-shape: tiny epochs → noisy ranks + re-sort churn; huge epochs →
+the order cannot follow the drift (reordering slower than the regime)."""
+
+from __future__ import annotations
+
+from repro.core import OrderingConfig, paper_filters_4
+from repro.data.stream import DriftConfig
+
+from benchmarks.common import BENCH_ROWS, emit, run_workload
+
+SWEEP = (10_000, 40_000, 160_000, 640_000, 2_560_000)
+
+
+def main() -> dict:
+    preds = paper_filters_4("sens")
+    drift = DriftConfig(kind="regime", period_rows=500_000, amplitude=1.5)
+    out = {}
+    for cr in SWEEP:
+        ordering = OrderingConfig(collect_rate=1000, calculate_rate=cr,
+                                  momentum=0.3)
+        res = run_workload(preds, adaptive=True, ordering=ordering,
+                           drift=drift)
+        out[cr] = res
+        emit(f"fig3/calculate_rate_{cr}", res)
+    return out
+
+
+if __name__ == "__main__":
+    main()

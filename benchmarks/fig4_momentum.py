@@ -1,0 +1,39 @@
+"""Figure 4: impact of momentum.
+
+Expected: m≈0 over-reacts to noisy epochs; m→1 freezes the initial order;
+middle values balance stability and agility. Noise comes from the MEASURED
+cost mode (clock jitter — the paper's System.nanoTime) plus very small
+per-epoch sample counts; the curve is averaged over 3 stream seeds.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import OrderingConfig, paper_filters_4
+from repro.data.stream import DriftConfig
+
+from benchmarks.common import BENCH_ROWS, run_workload
+
+SWEEP = (0.0, 0.15, 0.3, 0.6, 0.9, 0.99)
+
+
+def main() -> dict:
+    preds = paper_filters_4("sens")
+    drift = DriftConfig(kind="regime", period_rows=700_000, amplitude=1.5)
+    out = {}
+    for m in SWEEP:
+        ordering = OrderingConfig(collect_rate=20_000, calculate_rate=30_000,
+                                  momentum=m)
+        runs = [run_workload(preds, adaptive=True, ordering=ordering,
+                             cost_mode="measured", drift=drift, seed=seed)
+                for seed in (0, 1, 2)]
+        work = float(np.mean([r["work_units"] for r in runs]))
+        us = float(np.mean([r["us_per_row"] for r in runs]))
+        out[m] = {"work_units": work, "us_per_row": us}
+        print(f"fig4/momentum_{m},{us:.4f},work={work:.0f}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+"""Roofline harness: renders EXPERIMENTS §Roofline from the dry-run
+artifacts (artifacts/dryrun/*.json). One row per (arch × shape × mesh):
+three terms in seconds, dominant bottleneck, MODEL_FLOPS/HLO_FLOPs ratio,
+and a one-line what-would-move-it-down note."""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+ART = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+_NOTES = {
+    ("memory", "train"): "cut activation traffic: fused flash kernel, "
+                         "bf16 residuals, selective remat policy",
+    ("memory", "prefill"): "fuse attention inner loop (flash kernel) to "
+                           "keep accumulators in VMEM",
+    ("memory", "decode"): "cache-read bound (intrinsic); quantize KV or "
+                          "widen SP to spread cache reads",
+    ("collective", "train"): "reshard to cut gathers: EP all_to_all "
+                             "dispatch, overlap grad all-reduce with bwd",
+    ("collective", "prefill"): "keep activations sequence-sharded; avoid "
+                               "vocab-axis gathers (pad vocab)",
+    ("collective", "decode"): "merge softmax partials (SP) instead of "
+                              "gathering cache",
+    ("compute", "train"): "near MXU roof: raise per-chip batch or quantize",
+    ("compute", "prefill"): "near MXU roof: chunked attention already MXU-"
+                            "dominated",
+    ("compute", "decode"): "compute-bound decode is unusual; check batching",
+}
+
+
+def load(tag: str = "") -> list[dict]:
+    rows = []
+    for p in sorted(ART.glob("*.json")):
+        r = json.loads(p.read_text())
+        if r.get("tag", "") != tag:
+            continue
+        rows.append(r)
+    return rows
+
+
+def render(rows: list[dict], *, csv: bool = True) -> list[str]:
+    out = []
+    for r in rows:
+        mesh = r["mesh"]
+        if r["status"] == "skip":
+            out.append(f"roofline/{r['arch']}/{r['shape']}/{mesh},0.0000,"
+                       f"SKIP({r['why'][:40]})")
+            continue
+        if r["status"] != "ok":
+            out.append(f"roofline/{r['arch']}/{r['shape']}/{mesh},0.0000,"
+                       f"ERROR")
+            continue
+        ro = r["roofline"]
+        note = _NOTES.get((ro["dominant"], r["kind"]), "")
+        out.append(
+            f"roofline/{r['arch']}/{r['shape']}/{mesh},"
+            f"{ro['bound_s']*1e6:.1f},"
+            f"dom={ro['dominant']};tc={ro['t_compute_s']:.3e};"
+            f"tm={ro['t_memory_s']:.3e};tx={ro['t_collective_s']:.3e};"
+            f"useful={r['useful_flops_ratio']:.3f};"
+            f"mfu_ub={r['mfu_upper_bound']:.4f}")
+        if not csv:
+            out.append(f"#   → {note}")
+    return out
+
+
+def main() -> None:
+    for tag in ("", "opt"):
+        rows = load(tag)
+        if not rows:
+            if tag == "":
+                print("# no dry-run artifacts found — run "
+                      "PYTHONPATH=src python -m repro.launch.dryrun --all")
+            continue
+        print(f"# --- roofline[{tag or 'baseline'}] ---")
+        for line in render(rows):
+            print(line if tag == "" else line.replace("roofline/",
+                                                      "roofline-opt/"))
+        ok = [r for r in rows if r["status"] == "ok"]
+        by_dom = {}
+        for r in ok:
+            by_dom.setdefault(r["roofline"]["dominant"], []).append(r)
+        print(f"# {len(ok)} cells ok; dominant terms: "
+              + ", ".join(f"{k}={len(v)}" for k, v in sorted(by_dom.items())))
+
+
+if __name__ == "__main__":
+    main()

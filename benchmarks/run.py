@@ -1,0 +1,43 @@
+"""Benchmark harness — one entry per paper table/figure + roofline summary.
+Prints ``name,us_per_call,derived`` CSV (contract format).
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  REPRO_BENCH_ROWS=400000 ... -m benchmarks.run      # faster smoke
+  python -m benchmarks.run --only fig1,roofline
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="comma list: fig1,fig2,fig3,fig4,backends,roofline")
+    args = ap.parse_args()
+    want = set(args.only.split(",")) if args.only else None
+
+    def go(name, fn):
+        if want and name not in want:
+            return
+        t0 = time.perf_counter()
+        print(f"# === {name} ===", flush=True)
+        fn()
+        print(f"# {name} took {time.perf_counter()-t0:.1f}s", flush=True)
+
+    from benchmarks import (backends, fig1_permutations, fig2_collect_rate,
+                            fig3_calculate_rate, fig4_momentum, roofline)
+
+    go("fig1", lambda: (fig1_permutations.main("none"),
+                        fig1_permutations.main("regime")))
+    go("fig2", fig2_collect_rate.main)
+    go("fig3", fig3_calculate_rate.main)
+    go("fig4", fig4_momentum.main)
+    go("backends", backends.main)
+    go("roofline", roofline.main)
+
+
+if __name__ == "__main__":
+    main()

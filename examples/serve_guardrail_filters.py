@@ -1,0 +1,21 @@
+"""Serving example: batched requests through an adaptive guardrail chain
+(the paper's operator on the serving path) into prefill + decode of a
+reduced gemma2 config.
+
+    PYTHONPATH=src python examples/serve_guardrail_filters.py
+"""
+
+import sys
+
+from repro.launch import serve
+
+
+def main() -> None:
+    sys.argv = [sys.argv[0], "--arch", "gemma2-9b", "--smoke",
+                "--requests", "64", "--batch", "8",
+                "--prompt-len", "64", "--new-tokens", "8"]
+    serve.main()
+
+
+if __name__ == "__main__":
+    main()

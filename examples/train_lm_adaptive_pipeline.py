@@ -1,0 +1,25 @@
+"""End-to-end driver (deliverable b): train a reduced LM for a few hundred
+steps on CPU, fed by the adaptive-filter ingestion pipeline, with
+checkpoint/restart.
+
+    PYTHONPATH=src python examples/train_lm_adaptive_pipeline.py
+
+Equivalent CLI (any of the 10 archs, full configs on real hardware):
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-14b --smoke \
+        --steps 300 --batch 8 --seq 256
+"""
+
+import sys
+
+from repro.launch import train
+
+
+def main() -> None:
+    sys.argv = [sys.argv[0], "--arch", "qwen2.5-14b", "--smoke",
+                "--steps", "300", "--batch", "8", "--seq", "256",
+                "--ckpt-dir", "/tmp/repro_quickstart_ckpt"]
+    train.main()
+
+
+if __name__ == "__main__":
+    main()

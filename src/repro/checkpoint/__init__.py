@@ -1,0 +1,6 @@
+"""Checkpoint substrate: atomic, sharded, async-capable save/restore."""
+
+from repro.checkpoint.ckpt import (CheckpointManager, load_checkpoint,
+                                   save_checkpoint)
+
+__all__ = ["CheckpointManager", "save_checkpoint", "load_checkpoint"]

@@ -1,0 +1,176 @@
+"""Checkpointing for fault tolerance (DESIGN §6).
+
+Design (orbax is not available offline; this is a self-contained equivalent
+for the features the runtime needs):
+
+  * Layout: one directory per step, one ``.npz`` per host shard plus a json
+    manifest (tree structure, shapes, dtypes, step metadata, data-pipeline
+    state INCLUDING the adaptive filter's OrderState — ranks survive
+    restarts).
+  * Atomicity: write into ``<dir>.tmp`` then ``os.replace`` — a crash
+    mid-save never corrupts the latest checkpoint; restore picks the newest
+    COMMITTED step.
+  * Async: ``save(..., blocking=False)`` hands the host arrays to a worker
+    thread; ``wait()`` joins before the next save (single in-flight, like
+    production async checkpointers).
+  * Elastic restore: arrays are saved unsharded per host (process-local
+    view); ``load_checkpoint`` re-shards onto whatever mesh the restore-time
+    launcher provides, so N→M device restarts work (tested in
+    tests/test_fault_tolerance.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import pathlib
+import shutil
+import threading
+
+import jax
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    """Flatten pytree to {path: leaf} with stable, readable keys."""
+    out = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.update(_flatten(tree[k], f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)) and not hasattr(tree, "_fields"):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    elif hasattr(tree, "_fields"):               # NamedTuple
+        for k in tree._fields:
+            out.update(_flatten(getattr(tree, k), f"{prefix}{k}/"))
+    else:
+        out[prefix[:-1]] = tree
+    return out
+
+
+def _unflatten_like(template, flat, prefix=""):
+    if isinstance(template, dict):
+        return {k: _unflatten_like(template[k], flat, f"{prefix}{k}/")
+                for k in template}
+    if hasattr(template, "_fields"):
+        return type(template)(*[
+            _unflatten_like(getattr(template, k), flat, f"{prefix}{k}/")
+            for k in template._fields])
+    if isinstance(template, (list, tuple)):
+        return type(template)(
+            _unflatten_like(v, flat, f"{prefix}{i}/")
+            for i, v in enumerate(template))
+    return flat[prefix[:-1]]
+
+
+def save_checkpoint(directory, step: int, tree, *, extra: dict | None = None,
+                    process_id: int = 0) -> pathlib.Path:
+    """Atomic blocking save of ``tree`` (+ json-serializable ``extra``)."""
+    directory = pathlib.Path(directory)
+    final = directory / f"step_{step:010d}"
+    tmp = directory / f"step_{step:010d}.tmp"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+
+    flat = _flatten(tree)
+    arrays = {k: np.asarray(v) for k, v in flat.items()}
+    # numpy can't serialize ml_dtypes (bfloat16, fp8): store raw bit views
+    # and record the logical dtype in the manifest
+    encoded = {}
+    dtypes = {}
+    for k, v in arrays.items():
+        dtypes[k] = str(v.dtype)
+        if v.dtype.kind == "V" or v.dtype.name not in np.sctypeDict:
+            v = v.view(np.uint16 if v.dtype.itemsize == 2 else np.uint8)
+        encoded[k] = v
+    np.savez(tmp / f"shard_{process_id}.npz",
+             **{k.replace("/", "\x1f"): v for k, v in encoded.items()})
+    manifest = {
+        "step": step,
+        "keys": sorted(arrays),
+        "shapes": {k: list(v.shape) for k, v in arrays.items()},
+        "dtypes": dtypes,
+        "extra": extra or {},
+    }
+    (tmp / "manifest.json").write_text(json.dumps(manifest))
+    if final.exists():
+        shutil.rmtree(final)
+    os.replace(tmp, final)                      # commit point
+    return final
+
+
+def latest_step(directory) -> int | None:
+    directory = pathlib.Path(directory)
+    if not directory.exists():
+        return None
+    steps = [int(p.name.split("_")[1]) for p in directory.iterdir()
+             if p.is_dir() and p.name.startswith("step_")
+             and not p.name.endswith(".tmp")
+             and (p / "manifest.json").exists()]
+    return max(steps) if steps else None
+
+
+def load_checkpoint(directory, template, *, step: int | None = None,
+                    shardings=None, process_id: int = 0):
+    """Restore into the structure of ``template``; optionally re-shard onto
+    ``shardings`` (same pytree structure) — the elastic-rescale path."""
+    directory = pathlib.Path(directory)
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint in {directory}")
+    path = directory / f"step_{step:010d}"
+    manifest = json.loads((path / "manifest.json").read_text())
+    with np.load(path / f"shard_{process_id}.npz") as z:
+        flat = {k.replace("\x1f", "/"): z[k] for k in z.files}
+    for k, want in manifest["dtypes"].items():
+        if k in flat and str(flat[k].dtype) != want:
+            import ml_dtypes
+            flat[k] = flat[k].view(np.dtype(getattr(ml_dtypes, want, want)))
+    tree = _unflatten_like(template, flat)
+    if shardings is not None:
+        tree = jax.tree.map(
+            lambda x, s: jax.device_put(x, s), tree, shardings)
+    return tree, manifest["extra"], step
+
+
+@dataclasses.dataclass
+class CheckpointManager:
+    """Keeps the last ``keep`` checkpoints; optional async saves."""
+
+    directory: str
+    keep: int = 3
+    _worker: threading.Thread | None = None
+
+    def wait(self):
+        if self._worker is not None:
+            self._worker.join()
+            self._worker = None
+
+    def save(self, step: int, tree, *, extra=None, blocking=True):
+        self.wait()
+        host_tree = jax.tree.map(np.asarray, tree)   # snapshot before async
+
+        def do():
+            save_checkpoint(self.directory, step, host_tree, extra=extra)
+            self._gc()
+
+        if blocking:
+            do()
+        else:
+            self._worker = threading.Thread(target=do, daemon=True)
+            self._worker.start()
+
+    def restore(self, template, *, step=None, shardings=None):
+        return load_checkpoint(self.directory, template, step=step,
+                               shardings=shardings)
+
+    def _gc(self):
+        d = pathlib.Path(self.directory)
+        steps = sorted(int(p.name.split("_")[1]) for p in d.iterdir()
+                       if p.is_dir() and p.name.startswith("step_")
+                       and not p.name.endswith(".tmp"))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(d / f"step_{s:010d}", ignore_errors=True)

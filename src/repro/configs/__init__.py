@@ -1,0 +1,48 @@
+"""Config registry: ``get_config(arch)`` / ``get_smoke_config(arch)`` /
+``ARCHS`` (the 10 assigned architectures) / ``SHAPES`` (the 4 cells)."""
+
+import importlib
+
+from repro.configs.base import (LONG_CONTEXT_OK, SHAPES, MLAConfig,
+                                ModelConfig, MoEConfig, ShapeCell, SSMConfig)
+
+_MODULES = {
+    "deepseek-v3-671b": "deepseek_v3_671b",
+    "dbrx-132b": "dbrx_132b",
+    "zamba2-2.7b": "zamba2_2p7b",
+    "rwkv6-3b": "rwkv6_3b",
+    "gemma2-9b": "gemma2_9b",
+    "qwen2.5-14b": "qwen2p5_14b",
+    "chatglm3-6b": "chatglm3_6b",
+    "glm4-9b": "glm4_9b",
+    "qwen2-vl-2b": "qwen2_vl_2b",
+    "whisper-base": "whisper_base",
+}
+
+ARCHS = tuple(_MODULES)
+
+
+def _module(arch: str):
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {list(_MODULES)}")
+    return importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+
+
+def get_config(arch: str) -> ModelConfig:
+    return _module(arch).CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    return _module(arch).smoke_config()
+
+
+def cell_is_runnable(arch: str, shape: str) -> tuple[bool, str]:
+    """Skip policy from DESIGN §5 (long_500k needs sub-quadratic mixing)."""
+    if shape == "long_500k" and arch not in LONG_CONTEXT_OK:
+        return False, "full attention is O(L^2) at 524k (DESIGN §5 skip)"
+    return True, ""
+
+
+__all__ = ["ARCHS", "SHAPES", "LONG_CONTEXT_OK", "ModelConfig", "MoEConfig",
+           "MLAConfig", "SSMConfig", "ShapeCell", "get_config",
+           "get_smoke_config", "cell_is_runnable"]

@@ -1,0 +1,148 @@
+"""Config dataclasses for the model zoo + input-shape cells.
+
+Every assigned architecture is one ``ModelConfig`` instance in its own
+``configs/<id>.py`` (exact numbers from the assignment) plus a
+``smoke_config()`` — a reduced same-family config for CPU tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    n_shared: int = 0            # always-on shared experts (DeepSeek-V3)
+    d_expert: int = 0            # expert FFN hidden dim
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.001
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 64
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64           # mamba2 SSD head dim
+    chunk: int = 256             # SSD chunk length
+    n_groups: int = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                  # dense | moe | hybrid | ssm | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    d_head: int = 0              # 0 → d_model // n_heads
+    rope_style: str = "half"     # half | interleaved | mrope | none
+    rope_theta: float = 10000.0
+    qkv_bias: bool = False
+    attn_softcap: Optional[float] = None
+    final_softcap: Optional[float] = None
+    window: Optional[int] = None          # sliding-window size (local layers)
+    local_global_every: int = 0           # >0: every Nth layer is global
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+    hybrid_attn_every: int = 0            # zamba2: shared attn every k blocks
+    enc_layers: int = 0                   # whisper: encoder depth
+    enc_seq: int = 1500                   # whisper: encoder frames (stub)
+    embeds_input: bool = False            # vlm/audio: takes embeddings, not ids
+    tie_embeddings: bool = True
+    norm_eps: float = 1e-5
+    post_norm: bool = False               # gemma2 sandwich norms
+    mtp_heads: int = 0                    # deepseek multi-token prediction
+    attn_chunk: int = 4096                # flash-chunk length (perf knob;
+                                          # baseline table used 1024)
+
+    def __post_init__(self):
+        if self.d_head == 0:
+            object.__setattr__(self, "d_head", self.d_model // self.n_heads)
+        if self.n_heads % max(self.n_kv_heads, 1):
+            raise ValueError("n_heads must be divisible by n_kv_heads")
+
+    # ------------------------------------------------------------ accounting
+    def param_count(self) -> int:
+        """Analytic parameter count (drives MODEL_FLOPS in §Roofline)."""
+        d, L = self.d_model, self.n_layers
+        emb = self.vocab * d * (1 if self.tie_embeddings else 2)
+        per_layer = 0
+        # attention / mixer
+        if self.family == "ssm":            # rwkv6
+            per_layer += 5 * d * d + 3 * d * self.d_ff  # time-mix + channel-mix
+        elif self.mla is not None:
+            m = self.mla
+            h = self.n_heads
+            per_layer += d * m.q_lora_rank + m.q_lora_rank * h * (m.qk_nope_dim + m.qk_rope_dim)
+            per_layer += d * (m.kv_lora_rank + m.qk_rope_dim)
+            per_layer += m.kv_lora_rank * h * (m.qk_nope_dim + m.v_head_dim)
+            per_layer += h * m.v_head_dim * d
+        elif self.family == "hybrid":
+            s = self.ssm
+            d_in = s.expand * d
+            per_layer += 2 * d * d_in + d_in * d  # in/out proj (approx, BC small)
+        else:
+            hd = self.d_head
+            per_layer += d * self.n_heads * hd + 2 * d * self.n_kv_heads * hd \
+                + self.n_heads * hd * d
+        # ffn / moe
+        if self.moe is not None:
+            e = self.moe
+            per_layer += (e.n_experts + e.n_shared) * 3 * d * e.d_expert
+            per_layer += d * e.n_experts  # router
+        elif self.family not in ("ssm", "hybrid"):
+            per_layer += 3 * d * self.d_ff
+        total = emb + L * per_layer
+        if self.family == "hybrid" and self.hybrid_attn_every:
+            total += 4 * d * d + 3 * d * self.d_ff  # one shared attn+ffn block
+        if self.enc_layers:
+            hd = self.d_head
+            enc = self.enc_layers * (4 * d * self.n_heads * hd + 3 * d * self.d_ff)
+            total += enc + self.n_layers * (2 * d * d)  # + cross-attn kv/q
+        return int(total)
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: shared + top_k experts only)."""
+        if self.moe is None:
+            return self.param_count()
+        e = self.moe
+        d, L = self.d_model, self.n_layers
+        inactive = L * (e.n_experts - e.top_k) * 3 * d * e.d_expert
+        return int(self.param_count() - inactive)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    """One (input-shape) column of the assignment table."""
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                    # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524288, 1, "decode"),
+}
+
+# archs allowed to run long_500k (sub-quadratic sequence mixing only)
+LONG_CONTEXT_OK = ("zamba2-2.7b", "rwkv6-3b")

@@ -1,0 +1,18 @@
+"""chatglm3-6b [dense] — 2d (interleaved, half-dims) RoPE, GQA kv=2.
+[arXiv:2406.12793]"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="chatglm3-6b", family="dense",
+    n_layers=28, d_model=4096, n_heads=32, n_kv_heads=2,
+    d_ff=13696, vocab=65024, rope_style="interleaved", qkv_bias=True,
+)
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="chatglm3-smoke", family="dense",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+        d_ff=128, vocab=256, rope_style="interleaved", qkv_bias=True,
+    )

@@ -1,0 +1,25 @@
+"""deepseek-v3-671b [moe] — MLA, 1 shared + 256 routed top-8, MTP.
+[arXiv:2412.19437; hf]"""
+
+from repro.configs.base import MLAConfig, ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v3-671b", family="moe",
+    n_layers=61, d_model=7168, n_heads=128, n_kv_heads=128,
+    d_ff=2048, vocab=129280,
+    mla=MLAConfig(q_lora_rank=1536, kv_lora_rank=512,
+                  qk_nope_dim=128, qk_rope_dim=64, v_head_dim=128),
+    moe=MoEConfig(n_experts=256, top_k=8, n_shared=1, d_expert=2048),
+    tie_embeddings=False, mtp_heads=1,
+)
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="deepseek-v3-smoke", family="moe",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, d_ff=128, vocab=256,
+        mla=MLAConfig(q_lora_rank=32, kv_lora_rank=16,
+                      qk_nope_dim=16, qk_rope_dim=8, v_head_dim=16),
+        moe=MoEConfig(n_experts=8, top_k=2, n_shared=1, d_expert=96),
+        tie_embeddings=False, mtp_heads=1,
+    )

@@ -1,0 +1,21 @@
+"""gemma2-9b [dense] — local+global alternating attention, logit softcaps.
+[arXiv:2408.00118]"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma2-9b", family="dense",
+    n_layers=42, d_model=3584, n_heads=16, n_kv_heads=8, d_head=256,
+    d_ff=14336, vocab=256000,
+    attn_softcap=50.0, final_softcap=30.0,
+    window=4096, local_global_every=2, post_norm=True,
+)
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="gemma2-smoke", family="dense",
+        n_layers=4, d_model=64, n_heads=4, n_kv_heads=2, d_head=16,
+        d_ff=128, vocab=256, attn_softcap=50.0, final_softcap=30.0,
+        window=32, local_global_every=2, post_norm=True,
+    )

@@ -1,0 +1,21 @@
+"""The paper's own workload config: Table 1 defaults + the 4-predicate chain
+over the 75M-row synthetic date/int/string stream."""
+
+import dataclasses
+
+from repro.core.ordering import OrderingConfig
+from repro.data.stream import DriftConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class PaperWorkload:
+    total_rows: int = 75_000_000          # the paper's dataset size
+    bench_rows: int = 3_000_000           # CPU-budget default for benchmarks
+    batch_rows: int = 65536
+    ordering: OrderingConfig = OrderingConfig(
+        collect_rate=1000, calculate_rate=1_000_000, momentum=0.3)
+    drift: DriftConfig = DriftConfig(kind="regime", period_rows=750_000,
+                                     amplitude=1.5)
+
+
+DEFAULT = PaperWorkload()

@@ -1,0 +1,21 @@
+"""qwen2-vl-2b [vlm] — M-RoPE backbone; vision frontend is a STUB:
+``input_specs()`` supplies precomputed patch embeddings + 3d positions.
+[arXiv:2409.12191]"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-2b", family="vlm",
+    n_layers=28, d_model=1536, n_heads=12, n_kv_heads=2,
+    d_ff=8960, vocab=151936, rope_style="mrope", qkv_bias=True,
+    embeds_input=True,
+)
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2-vl-smoke", family="vlm",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+        d_ff=128, vocab=256, rope_style="mrope", qkv_bias=True,
+        embeds_input=True,
+    )

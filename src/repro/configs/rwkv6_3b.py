@@ -1,0 +1,18 @@
+"""rwkv6-3b [ssm] — Finch: token shift + data-dependent decay, attention-free.
+[arXiv:2404.05892; hf]"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-3b", family="ssm",
+    n_layers=32, d_model=2560, n_heads=40, n_kv_heads=40,  # head_dim 64
+    d_ff=8960, vocab=65536, rope_style="none",
+)
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="rwkv6-smoke", family="ssm",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+        d_ff=128, vocab=256, rope_style="none",
+    )

@@ -1,0 +1,20 @@
+"""whisper-base [audio] — enc-dec; conv frontend is a STUB: ``input_specs()``
+supplies precomputed frame embeddings for the encoder. [arXiv:2212.04356]"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-base", family="audio",
+    n_layers=6, d_model=512, n_heads=8, n_kv_heads=8,
+    d_ff=2048, vocab=51865, rope_style="none",
+    enc_layers=6, enc_seq=1500, embeds_input=True, tie_embeddings=False,
+)
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-smoke", family="audio",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+        d_ff=128, vocab=256, rope_style="none",
+        enc_layers=2, enc_seq=64, embeds_input=True, tie_embeddings=False,
+    )

@@ -1,0 +1,23 @@
+"""zamba2-2.7b [hybrid] — Mamba2 blocks + shared attention block.
+[arXiv:2411.15242; hf]"""
+
+from repro.configs.base import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-2.7b", family="hybrid",
+    n_layers=54, d_model=2560, n_heads=32, n_kv_heads=32,
+    d_ff=10240, vocab=32000,
+    # chunk=128: SSD intra-chunk traffic ∝ B·S·chunk·H — halving chunk
+    # halved the quadratic-part HBM bytes (EXPERIMENTS §Perf, zamba2 cell)
+    ssm=SSMConfig(d_state=64, d_conv=4, expand=2, head_dim=64, chunk=128),
+    hybrid_attn_every=6,
+)
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="zamba2-smoke", family="hybrid",
+        n_layers=4, d_model=64, n_heads=4, n_kv_heads=4, d_ff=128, vocab=256,
+        ssm=SSMConfig(d_state=16, d_conv=4, expand=2, head_dim=16, chunk=32),
+        hybrid_attn_every=2,
+    )

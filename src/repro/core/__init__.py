@@ -1,0 +1,25 @@
+"""Adaptive filter ordering — the paper's contribution, as a JAX module.
+
+Public API:
+  Predicate, pack, OP_*            — predicate algebra
+  OrderingConfig, OrderState       — Table-1 parameters + adaptive state
+  AdaptiveFilter, AdaptiveFilterConfig, static_filter — the operator
+  Scope                            — per_batch / per_shard / centralized
+"""
+
+from repro.core.adaptive_filter import (AdaptiveFilter, AdaptiveFilterConfig,
+                                        StepMetrics, static_filter)
+from repro.core.ordering import OrderingConfig, OrderState, init_order_state
+from repro.core.predicates import (OP_BETWEEN, OP_EQ, OP_GT, OP_HASHMIX,
+                                   OP_LT, Predicate, PredicateSpecs, pack,
+                                   paper_filters_4)
+from repro.core.scope import Scope
+from repro.core.stats import FilterStats
+
+__all__ = [
+    "AdaptiveFilter", "AdaptiveFilterConfig", "StepMetrics", "static_filter",
+    "OrderingConfig", "OrderState", "init_order_state",
+    "OP_BETWEEN", "OP_EQ", "OP_GT", "OP_HASHMIX", "OP_LT",
+    "Predicate", "PredicateSpecs", "pack", "paper_filters_4",
+    "Scope", "FilterStats",
+]

@@ -1,0 +1,84 @@
+"""Beyond-paper extension: A-greedy-style conditional-selectivity ordering.
+
+The paper names A-greedy [Babu et al., SIGMOD'04] as future work (§4). The
+rank ordering is only optimal when predicate outcomes are independent; under
+correlation, ordering by *conditional* selectivity does better. Because the
+monitor lane already evaluates every predicate on every sampled row (that is
+the paper's own bias-avoidance trick), the full outcome matrix is available
+for free — we accumulate pairwise pass counts and order greedily:
+
+  1. first predicate: min unconditional rank  c_i / (1 - s_i)
+  2. next: min  c_j / (1 - s_{j|S})  where the conditional pass fraction
+     given the already-chosen set S is approximated from pairwise counts by
+     min_{i∈S} P(pass j | pass i)  — exact for chains of pairwise-dominant
+     correlations, conservative otherwise (documented approximation; the
+     full profile of Babu et al. needs O(2^P) counters).
+
+Used by ``benchmarks/fig1_permutations.py --strategy agreedy`` and compared
+against the paper-faithful rank policy in EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+_EPS = 1e-6
+
+
+class PairStats(NamedTuple):
+    pass_count: jnp.ndarray   # f32[P]   rows passing i
+    pair_pass: jnp.ndarray    # f32[P,P] rows passing both i and j
+    n: jnp.ndarray            # f32[]    monitored rows
+
+
+def init_pair_stats(n_predicates: int) -> PairStats:
+    return PairStats(
+        pass_count=jnp.zeros((n_predicates,), jnp.float32),
+        pair_pass=jnp.zeros((n_predicates, n_predicates), jnp.float32),
+        n=jnp.zeros((), jnp.float32),
+    )
+
+
+def accumulate_pairs(stats: PairStats, results: jnp.ndarray,
+                     valid: jnp.ndarray) -> PairStats:
+    """``results``: bool[P, M] monitor-lane outcomes; ``valid``: bool[M]."""
+    r = jnp.logical_and(results, valid[None, :]).astype(jnp.float32)
+    return PairStats(
+        pass_count=stats.pass_count + jnp.sum(r, axis=1),
+        pair_pass=stats.pair_pass + r @ r.T,
+        n=stats.n + jnp.sum(valid).astype(jnp.float32),
+    )
+
+
+def conditional_greedy_order(stats: PairStats, costs: jnp.ndarray) -> jnp.ndarray:
+    """Greedy conditional-rank ordering (host-side; P is tiny)."""
+    import numpy as np
+
+    p = int(costs.shape[0])
+    n = float(jnp.maximum(stats.n, 1.0))
+    passc = np.asarray(stats.pass_count, dtype=np.float64)
+    pair = np.asarray(stats.pair_pass, dtype=np.float64)
+    c = np.asarray(costs, dtype=np.float64)
+    c = c / max(c.max(), _EPS)
+
+    s_uncond = np.clip(passc / n, 0.0, 1.0)
+    remaining = list(range(p))
+    order: list[int] = []
+    while remaining:
+        best, best_rank = None, None
+        for j in remaining:
+            if not order:
+                s = s_uncond[j]
+            else:
+                # min over chosen i of P(pass j | pass i)
+                conds = [pair[i, j] / max(passc[i], 1.0) for i in order]
+                s = float(np.clip(min(conds), 0.0, 1.0))
+            rank = c[j] / max(1.0 - s, _EPS)
+            if best_rank is None or rank < best_rank:
+                best, best_rank = j, rank
+        order.append(best)
+        remaining.remove(best)
+    return jnp.asarray(order, jnp.int32)

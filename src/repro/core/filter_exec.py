@@ -1,0 +1,120 @@
+"""Chain execution + monitor lane (pure-jnp reference path).
+
+Three execution backends exist in the framework; this module is the jit-able
+reference one. All three share semantics and are cross-checked by tests:
+
+  * ``jnp`` (here)     — fully vectorized masked evaluation. Exact row-level
+                         *work counters* (what Spark would have evaluated),
+                         usable inside a jitted training pipeline.
+  * ``numpy_compacted``— host path in ``executor_sim.py`` / benchmarks:
+                         boolean-index compaction between predicates, so wall
+                         time genuinely tracks the chosen order (row-exact
+                         short-circuit, like Spark's processNext).
+  * ``pallas``         — ``kernels/filter_chain``: fused single-HBM-pass tile
+                         kernel with tile-level early exit (the TPU target).
+
+Monitor lane (paper §2.1): rows with (global_row_index % collect_rate == 0)
+are sampled; *all* predicates are evaluated on them (correlation-bias-free),
+and numCut / cost accumulate only from those rows. Sampling is a
+deterministic stride — no PRNG — carried across batches by ``sample_phase``.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import predicates as pred_lib
+from repro.core.predicates import PredicateSpecs
+
+
+class ChainResult(NamedTuple):
+    mask: jnp.ndarray           # bool[R] — rows passing every predicate
+    work_units: jnp.ndarray     # f32[] — row-level cost-weighted work (Spark model)
+    active_before: jnp.ndarray  # f32[P] — rows alive before each chain position
+    cut_counts: jnp.ndarray     # f32[P] — monitor lane: rows failing each predicate
+    n_monitored: jnp.ndarray    # f32[] — monitor lane: sampled row count
+    monitor_cost: jnp.ndarray   # f32[P] — STATIC-mode cost contribution
+
+
+def monitor_indices(n_rows: int, collect_rate: int, sample_phase):
+    """Deterministic-stride sample positions for one batch.
+
+    Returns (idx_i32[max_samples], valid_bool[max_samples]); static shapes so
+    the whole thing jits. ``sample_phase`` = global row offset of this batch
+    modulo collect_rate.
+    """
+    max_samples = n_rows // collect_rate + 1
+    first = (-sample_phase) % collect_rate
+    idx = first + jnp.arange(max_samples, dtype=jnp.int32) * collect_rate
+    valid = idx < n_rows
+    return jnp.clip(idx, 0, n_rows - 1), valid
+
+
+def run_monitor(columns: jnp.ndarray, specs: PredicateSpecs,
+                collect_rate: int, sample_phase):
+    """Evaluate ALL predicates on the sampled rows only."""
+    n_rows = columns.shape[1]
+    idx, valid = monitor_indices(n_rows, collect_rate, sample_phase)
+    sampled = columns[:, idx]                      # f32[C, max_samples]
+    results = pred_lib.eval_all(specs, sampled)    # bool[P, max_samples]
+    cut = jnp.sum(jnp.logical_and(~results, valid[None, :]), axis=1)
+    n_monitored = jnp.sum(valid).astype(jnp.float32)
+    # STATIC cost model: each sampled row pays every predicate's calibrated
+    # per-row cost (the monitor lane evaluates all of them, as in the paper).
+    monitor_cost = specs.static_cost * n_monitored
+    return cut.astype(jnp.float32), n_monitored, monitor_cost
+
+
+def run_chain(columns: jnp.ndarray, specs: PredicateSpecs, perm: jnp.ndarray,
+              collect_rate: int, sample_phase) -> ChainResult:
+    """Masked conjunctive chain in ``perm`` order + monitor lane.
+
+    The boolean outcome is order-invariant (conjunction commutes); the work
+    counters are not — they are the paper's objective function, measured
+    exactly: predicate ``perm[k]`` is charged for every row still alive
+    before position k (what a row-at-a-time engine would evaluate).
+    """
+    n_rows = columns.shape[1]
+    n_preds = specs.n
+
+    mask = jnp.ones((n_rows,), bool)
+    work = jnp.zeros((), jnp.float32)
+    active_before = []
+
+    for k in range(n_preds):          # P is small & static → unrolled, lazy ops
+        i = perm[k]
+        alive = jnp.sum(mask).astype(jnp.float32)
+        active_before.append(alive)
+        work = work + alive * specs.static_cost[i]
+        x = jnp.take(columns, specs.column[i], axis=0)
+        res = pred_lib.eval_one(specs, i, x)
+        mask = jnp.logical_and(mask, res)
+
+    cut, n_mon, mon_cost = run_monitor(columns, specs, collect_rate, sample_phase)
+
+    return ChainResult(
+        mask=mask,
+        work_units=work,
+        active_before=jnp.stack(active_before),
+        cut_counts=cut,
+        n_monitored=n_mon,
+        monitor_cost=mon_cost,
+    )
+
+
+def compact(columns: jnp.ndarray, mask: jnp.ndarray, fill: float = 0.0):
+    """Stable stream compaction of surviving rows (cumsum + scatter).
+
+    Returns (packed f32[C, R], n_survivors i32[]): survivors are moved to the
+    front in order; the tail is ``fill``. Static output shape keeps it
+    jit-able; downstream stages read only the first n_survivors rows.
+    """
+    n_rows = columns.shape[1]
+    pos = jnp.cumsum(mask.astype(jnp.int32)) - 1           # target slot per survivor
+    dest = jnp.where(mask, pos, n_rows)                     # dump non-survivors
+    out = jnp.full((columns.shape[0], n_rows + 1), fill, columns.dtype)
+    out = out.at[:, dest].set(columns)
+    return out[:, :n_rows], jnp.sum(mask.astype(jnp.int32))

@@ -1,0 +1,137 @@
+"""Epoch controller: collectRate sampling, calculateRate epochs, momentum.
+
+Functional port of the paper's per-executor metadata (§2.2). One
+``OrderState`` is the JVM-global state of one Spark executor; in the JAX
+pipeline one lives per data shard (see ``scope.py``). Because the state is
+threaded functionally through ``jax.lax`` control flow, the paper's lock is
+unnecessary here — exactly one epoch update happens per boundary by
+construction. (The thread/lock semantics of real Spark executors, including
+deferred updates, are reproduced separately in ``executor_sim.py``.)
+
+Counters are kept modulo the relevant rates in int32 so the state never
+overflows on unbounded streams (the paper's counters are JVM longs; we keep
+an epoch counter + in-epoch offsets instead, which is equivalent and
+checkpoint-friendly).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import stats as stats_lib
+from repro.core.stats import FilterStats
+
+
+@dataclasses.dataclass(frozen=True)
+class OrderingConfig:
+    """Table 1 of the paper (defaults reproduced verbatim)."""
+
+    collect_rate: int = 1000        # sample 1 row in every collect_rate
+    calculate_rate: int = 1_000_000  # re-rank after this many rows
+    momentum: float = 0.3            # past-preservation factor
+    # Beyond-paper (EXPERIMENTS §Perf): snap-on-flip. Momentum smooths noisy
+    # epochs but delays regime changes; if the CURRENT order's expected
+    # per-row cost under the FRESH epoch stats exceeds snap_threshold × the
+    # fresh-optimal order's cost, the update bypasses momentum entirely.
+    # 0.0 disables (paper-faithful default).
+    snap_threshold: float = 0.0
+
+    def __post_init__(self) -> None:
+        if self.collect_rate < 1:
+            raise ValueError("collect_rate must be >= 1")
+        if self.calculate_rate < 1:
+            raise ValueError("calculate_rate must be >= 1")
+        if not 0.0 <= self.momentum < 1.0:
+            raise ValueError("momentum must be in [0, 1)")
+        if self.snap_threshold < 0.0:
+            raise ValueError("snap_threshold must be >= 0")
+
+
+class OrderState(NamedTuple):
+    """The adaptive filter's full mutable state (checkpointable pytree)."""
+
+    perm: jnp.ndarray          # i32[P] current evaluation order
+    adj_rank: jnp.ndarray      # f32[P] momentum-smoothed ranks
+    stats: FilterStats         # accumulators for the current epoch
+    rows_into_epoch: jnp.ndarray   # i32[] rows processed since last re-rank
+    sample_phase: jnp.ndarray      # i32[] global row offset mod collect_rate
+    epoch: jnp.ndarray             # i32[] completed epochs (0 → no history yet)
+
+
+def init_order_state(n_predicates: int) -> OrderState:
+    """Initial order = the user-given statement order, as in Spark."""
+    return OrderState(
+        perm=jnp.arange(n_predicates, dtype=jnp.int32),
+        adj_rank=jnp.zeros((n_predicates,), jnp.float32),
+        stats=stats_lib.init_stats(n_predicates),
+        rows_into_epoch=jnp.zeros((), jnp.int32),
+        sample_phase=jnp.zeros((), jnp.int32),
+        epoch=jnp.zeros((), jnp.int32),
+    )
+
+
+def epoch_update(state: OrderState, cfg: OrderingConfig) -> OrderState:
+    """Re-rank at an epoch boundary; reset accumulators; keep momentum memory.
+
+    Guard: if the epoch collected no monitored rows (possible with tiny
+    epochs), keep the previous order — reordering on zero evidence is the
+    kind of thrash the momentum term exists to prevent.
+    """
+    have_evidence = state.stats.n_monitored > 0.0
+
+    rank_now = stats_lib.ranks(state.stats)
+    adj = stats_lib.momentum_update(state.adj_rank, rank_now, cfg.momentum,
+                                    first_epoch=state.epoch == 0)
+    if cfg.snap_threshold > 0.0:
+        nc = stats_lib.normalized_costs(state.stats)
+        s = stats_lib.selectivities(state.stats)
+        cost_cur = stats_lib.expected_chain_cost(nc, s, state.perm)
+        fresh = stats_lib.order_from_ranks(rank_now)
+        cost_fresh = stats_lib.expected_chain_cost(nc, s, fresh)
+        snap = cost_cur > cfg.snap_threshold * cost_fresh
+        adj = jnp.where(snap, rank_now, adj)
+    new_perm = stats_lib.order_from_ranks(adj)
+
+    perm = jnp.where(have_evidence, new_perm, state.perm)
+    adj_rank = jnp.where(have_evidence, adj, state.adj_rank)
+    epoch = state.epoch + jnp.where(have_evidence, 1, 0).astype(jnp.int32)
+
+    return OrderState(
+        perm=perm,
+        adj_rank=adj_rank,
+        stats=stats_lib.init_stats(int(state.perm.shape[0])),
+        rows_into_epoch=jnp.zeros((), jnp.int32),
+        sample_phase=state.sample_phase,
+        epoch=epoch,
+    )
+
+
+def advance(state: OrderState, cfg: OrderingConfig,
+            cut_counts: jnp.ndarray, costs: jnp.ndarray,
+            n_monitored, n_rows: int) -> OrderState:
+    """Fold one batch's monitor results in; fire the epoch boundary if crossed.
+
+    Epoch boundaries are honored at batch granularity (a batch is the unit of
+    work, like a Spark task's row group); with batch ≪ calculate_rate this is
+    the paper's behavior. ``n_rows`` must be a static python int (batch
+    shape), so the modulo bookkeeping stays in int32 regardless of stream
+    length.
+    """
+    new_stats = stats_lib.accumulate(state.stats, cut_counts, costs, n_monitored)
+    rows = state.rows_into_epoch + jnp.asarray(n_rows, jnp.int32)
+    state = state._replace(
+        stats=new_stats,
+        rows_into_epoch=rows,
+        sample_phase=(state.sample_phase + n_rows) % cfg.collect_rate,
+    )
+
+    def fire(s: OrderState) -> OrderState:
+        updated = epoch_update(s, cfg)
+        # carry the overshoot so epoch length is exact on average
+        return updated._replace(rows_into_epoch=s.rows_into_epoch % cfg.calculate_rate)
+
+    return jax.lax.cond(rows >= cfg.calculate_rate, fire, lambda s: s, state)

@@ -1,0 +1,64 @@
+"""Statistics scope policies (paper §2.2).
+
+The paper weighs three lifetimes for the adaptive metadata (ranks + epoch
+accumulators) and picks *per-executor*:
+
+  per-task     — state dies with each task: too little evidence accumulates.
+  centralized  — one global state at the driver: network traffic + contention.
+  per-executor — JVM-global state per executor: long-lived, zero network
+                 cost, and locally adaptive under heterogeneous data.
+
+Mapping here: an "executor" is one data shard of the ingestion pipeline (one
+host process, or one mesh data-row when the filter runs jitted under
+``shard_map``). A "task" is one micro-batch step.
+
+  PER_BATCH    — reset OrderState every step (per-task analogue).
+  PER_SHARD    — default; state persists per shard, NO collectives: the
+                 lowered HLO of the filter step contains no all-reduce
+                 (asserted by tests/test_scope.py), matching the paper's "no
+                 data transferred through the network".
+  CENTRALIZED  — epoch statistics are psum-merged across the given mesh axes
+                 before ranks are computed, so every shard adopts the global
+                 order; costs one small (2P+1 floats) all-reduce per epoch.
+"""
+
+from __future__ import annotations
+
+import enum
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.stats import FilterStats
+
+
+class Scope(enum.Enum):
+    PER_BATCH = "per_batch"
+    PER_SHARD = "per_shard"
+    CENTRALIZED = "centralized"
+
+
+def reduce_stats(stats: FilterStats, scope: Scope,
+                 axis_names: Sequence[str] = ()) -> FilterStats:
+    """Apply the scope's reduction to epoch accumulators.
+
+    Must be called inside ``shard_map``/``pmap`` for CENTRALIZED to see the
+    named axes; PER_SHARD / PER_BATCH are identity (no communication).
+    """
+    if scope is Scope.CENTRALIZED and axis_names:
+        return FilterStats(
+            num_cut=jax.lax.psum(stats.num_cut, axis_names),
+            cost_acc=jax.lax.psum(stats.cost_acc, axis_names),
+            n_monitored=jax.lax.psum(stats.n_monitored, axis_names),
+        )
+    return stats
+
+
+def scope_from_str(name: str) -> Scope:
+    try:
+        return Scope(name)
+    except ValueError as exc:
+        raise ValueError(
+            f"unknown scope {name!r}; pick from "
+            f"{[s.value for s in Scope]}") from exc

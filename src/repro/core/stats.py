@@ -1,0 +1,107 @@
+"""Per-predicate statistics: the paper's numCut / cost arrays and rank math.
+
+Faithful to §2.1 of the paper:
+
+  * ``num_cut[i]``   — monitored rows that did NOT satisfy predicate i
+  * ``cost_acc[i]``  — accumulated evaluation cost attributed to predicate i
+  * selectivity      s_i  = 1 - num_cut_i / n_monitored        (pass fraction)
+  * normalized cost  nc_i = avg_cost_i / max_j avg_cost_j  ∈ [0, 1]
+  * rank             rank_i = nc_i / (1 - s_i)
+  * momentum         adj_rank_i(t) = (1-m)·rank_i(t) + m·adj_rank_i(t-1)
+
+Ordering predicates by adj_rank ascending minimizes the expected per-row
+chain cost  Σ_i c_i Π_{j<i} s_j  (see tests/test_property_hypothesis.py for
+the machine-checked proof-by-enumeration).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+_EPS = 1e-6
+
+
+class FilterStats(NamedTuple):
+    """Accumulators collected since the start of the current epoch."""
+
+    num_cut: jnp.ndarray      # f32[P]
+    cost_acc: jnp.ndarray     # f32[P]
+    n_monitored: jnp.ndarray  # f32[]
+
+
+def init_stats(n_predicates: int) -> FilterStats:
+    return FilterStats(
+        num_cut=jnp.zeros((n_predicates,), jnp.float32),
+        cost_acc=jnp.zeros((n_predicates,), jnp.float32),
+        n_monitored=jnp.zeros((), jnp.float32),
+    )
+
+
+def merge_stats(a: FilterStats, b: FilterStats) -> FilterStats:
+    """Associative merge (used by the centralized scope's psum and by tests)."""
+    return FilterStats(a.num_cut + b.num_cut, a.cost_acc + b.cost_acc,
+                       a.n_monitored + b.n_monitored)
+
+
+def accumulate(stats: FilterStats, cut_counts: jnp.ndarray,
+               costs: jnp.ndarray, n_monitored) -> FilterStats:
+    """Fold one batch's monitor-lane results into the epoch accumulators."""
+    return FilterStats(
+        num_cut=stats.num_cut + cut_counts.astype(jnp.float32),
+        cost_acc=stats.cost_acc + costs.astype(jnp.float32),
+        n_monitored=stats.n_monitored + jnp.asarray(n_monitored, jnp.float32),
+    )
+
+
+def selectivities(stats: FilterStats) -> jnp.ndarray:
+    """Pass fraction per predicate, from monitored rows only (paper §2.1)."""
+    n = jnp.maximum(stats.n_monitored, 1.0)
+    s = 1.0 - stats.num_cut / n
+    return jnp.clip(s, 0.0, 1.0)
+
+
+def normalized_costs(stats: FilterStats) -> jnp.ndarray:
+    """Average per-row cost, min-max-free normalization to [0,1] by the max."""
+    n = jnp.maximum(stats.n_monitored, 1.0)
+    avg = stats.cost_acc / n
+    return avg / jnp.maximum(jnp.max(avg), _EPS)
+
+
+def ranks(stats: FilterStats) -> jnp.ndarray:
+    """rank_i = nc_i / (1 - s_i); selective-and-cheap predicates rank lowest.
+
+    The 1-s denominator is floored so an all-pass predicate gets a large but
+    finite rank (it should run last — it cuts nothing).
+    """
+    s = selectivities(stats)
+    nc = normalized_costs(stats)
+    return nc / jnp.maximum(1.0 - s, _EPS)
+
+
+def momentum_update(adj_prev: jnp.ndarray, rank_now: jnp.ndarray,
+                    momentum, first_epoch) -> jnp.ndarray:
+    """First-order difference equation from the paper, with cold-start.
+
+    On the very first epoch there is no history: adj_rank(0) = rank(0)
+    (equivalently momentum is ignored once).
+    """
+    m = jnp.asarray(momentum, jnp.float32)
+    blended = (1.0 - m) * rank_now + m * adj_prev
+    return jnp.where(first_epoch, rank_now, blended)
+
+
+def order_from_ranks(adj_rank: jnp.ndarray) -> jnp.ndarray:
+    """Ascending stable sort → evaluation permutation (ties by user order)."""
+    return jnp.argsort(adj_rank, stable=True).astype(jnp.int32)
+
+
+def expected_chain_cost(costs: jnp.ndarray, pass_probs: jnp.ndarray,
+                        perm: jnp.ndarray) -> jnp.ndarray:
+    """Σ_i c_{perm[i]} Π_{j<i} s_{perm[j]} — the quantity rank order minimizes."""
+    c = costs[perm]
+    s = pass_probs[perm]
+    surv = jnp.concatenate([jnp.ones((1,), s.dtype), jnp.cumprod(s)[:-1]])
+    return jnp.sum(c * surv)

@@ -1,0 +1,14 @@
+"""Data substrate: columnar record batches, synthetic drifting log stream
+(the paper's 75M-row date/int/string dataset, streaming + restartable),
+tokenizer stub, and the staged ingestion pipeline that feeds train_step."""
+
+from repro.data.schema import RecordBatch
+from repro.data.stream import (BASE_DISTRIBUTIONS, DriftConfig, LogStream,
+                               gen_batch, norm_ppf, threshold_for_quantile)
+from repro.data.pipeline import Pipeline, PipelineState
+
+__all__ = [
+    "RecordBatch", "BASE_DISTRIBUTIONS", "DriftConfig", "LogStream",
+    "gen_batch", "norm_ppf", "threshold_for_quantile", "Pipeline",
+    "PipelineState",
+]

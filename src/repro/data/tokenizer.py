@@ -1,0 +1,41 @@
+"""Hash tokenizer stub: surviving log rows → LM token streams.
+
+A real deployment would tokenize the log's text payload; the assigned-arch
+contract allows modality frontends to be stubs. This one is deterministic
+and cheap: each surviving row is mixed into ``tokens_per_row`` int tokens via
+a splitmix-style integer hash of its column values, so the LM examples are
+(a) a pure function of the filtered stream and (b) reproducible across
+restarts — which the fault-tolerance tests rely on.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+_GAMMA = np.uint64(0x9E3779B97F4A7C15)
+
+
+def _splitmix(x: np.ndarray) -> np.ndarray:
+    x = (x + _GAMMA).astype(np.uint64)
+    x ^= x >> np.uint64(30)
+    x = (x * np.uint64(0xBF58476D1CE4E5B9)) & np.uint64(0xFFFFFFFFFFFFFFFF)
+    x ^= x >> np.uint64(27)
+    x = (x * np.uint64(0x94D049BB133111EB)) & np.uint64(0xFFFFFFFFFFFFFFFF)
+    x ^= x >> np.uint64(31)
+    return x
+
+
+def rows_to_tokens(columns: np.ndarray, vocab_size: int,
+                   tokens_per_row: int = 8) -> np.ndarray:
+    """f32[C, R] → i32[R * tokens_per_row] token ids in [0, vocab_size)."""
+    if columns.shape[1] == 0:
+        return np.zeros((0,), np.int32)
+    base = np.zeros(columns.shape[1], np.uint64)
+    for c in range(columns.shape[0]):
+        base = _splitmix(base ^ columns[c].astype(np.float64).view(np.uint64))
+    toks = []
+    h = base
+    for _ in range(tokens_per_row):
+        h = _splitmix(h)
+        toks.append((h % np.uint64(vocab_size)).astype(np.int32))
+    return np.stack(toks, axis=1).reshape(-1)

@@ -1,0 +1,5 @@
+"""Fused adaptive filter-chain kernel (the paper's hot spot, TPU-native)."""
+
+from repro.kernels.filter_chain.ops import filter_chain
+
+__all__ = ["filter_chain"]

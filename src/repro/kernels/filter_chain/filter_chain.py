@@ -1,0 +1,175 @@
+"""Pallas TPU kernel: fused adaptive predicate chain over columnar tiles.
+
+Spark evaluates the chain row-at-a-time inside ``processNext``; the TPU
+adaptation (DESIGN §3) processes rows in VMEM tiles:
+
+  * one grid step = one (C, TILE) column tile, streamed HBM→VMEM once —
+    the whole chain is FUSED into a single pass over the data (Spark's
+    operator iterator touches rows once too, but pays per-row dispatch;
+    XLA's unfused jnp path would touch HBM once per predicate);
+  * predicates are evaluated vector-wise in the adaptive permutation order,
+    ANDing into a running mask; when a tile's mask empties, the remaining
+    predicates for that tile are SKIPPED (``pl.when`` — tile-granular
+    short-circuit, the vector analogue of the row-level early exit);
+  * the monitor lane (paper §2.1) evaluates ALL predicates on
+    stride-sampled rows and emits per-tile numCut / monitored counts;
+  * per-tile ``active_before`` counters reproduce the row-level work model
+    exactly (they count rows alive before each chain position), so the
+    paper's cost accounting survives vectorization bit-exactly.
+
+Memory layout: predicate spec arrays (i32/f32[P]) live in SMEM (scalar
+dispatch data); column tiles and outputs in VMEM. All intra-kernel compute
+is 2D (1, TILE)-shaped for VPU lane alignment; TILE is a multiple of 128.
+
+Grid-step cost model (for §Roofline): bytes/tile = C·TILE·4 in + TILE out;
+FLOPs/tile ≈ TILE · Σ_{k ≤ stop} cost(perm[k]) — memory-bound at ~0.25–2
+FLOP/byte unless expensive (HASHMIX) predicates dominate.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import predicates as pred_lib
+
+DEFAULT_TILE = 2048  # rows per grid step; multiple of 128 (VPU lanes)
+
+
+def _eval_pred_tile(cols_ref, col_idx, op, t1, t2, rounds):
+    """Evaluate one predicate on the whole (C, TILE) tile → bool(1, TILE).
+
+    ``col_idx``/``op``/... are dynamic scalars read from SMEM. The column is
+    selected with a dynamic sublane slice; the op dispatch is a scalar
+    switch, so only the selected branch's vector work executes (HASHMIX's
+    mix loop only runs for HASHMIX predicates — the cost heterogeneity the
+    ordering exploits is preserved on-chip).
+    """
+    x = pl.load(cols_ref, (pl.ds(col_idx, 1), slice(None)))  # f32[1, TILE]
+
+    def _hashmix():
+        def body(_, y):
+            y = y * pred_lib.MIX_MUL + pred_lib.MIX_ADD
+            return y - jnp.floor(y / pred_lib.MIX_MOD) * pred_lib.MIX_MOD
+        mixed = jax.lax.fori_loop(0, jnp.maximum(rounds, 1), body, x)
+        return mixed > t1
+
+    return jax.lax.switch(op, [
+        lambda: x > t1,
+        lambda: x < t1,
+        lambda: jnp.logical_and(x > t1, x < t2),
+        lambda: jnp.round(x) == jnp.round(t1),
+        _hashmix,
+    ])
+
+
+def _kernel(# --- SMEM scalar/spec refs ---
+            col_ref, op_ref, t1_ref, t2_ref, rounds_ref, perm_ref,
+            meta_ref,  # i32[4]: (n_rows, collect_rate, sample_phase, mode)
+            # --- VMEM data refs ---
+            cols_ref,
+            # --- outputs ---
+            mask_ref, active_ref, cut_ref, nmon_ref,
+            *, n_preds: int, tile: int):
+    t = pl.program_id(0)
+    n_rows = meta_ref[0]
+    collect_rate = meta_ref[1]
+    sample_phase = meta_ref[2]
+    block_mode = meta_ref[3]
+
+    lane = jax.lax.broadcasted_iota(jnp.int32, (1, tile), 1)
+    gidx = t * tile + lane
+    valid = gidx < n_rows                                    # bool(1, TILE)
+
+    # ----------------------------------------------------------- chain lane
+    mask = valid
+    for k in range(n_preds):                 # P static → unrolled on-chip
+        alive = jnp.sum(mask.astype(jnp.float32))
+        active_ref[0, k] = alive
+        pidx = perm_ref[k]
+        res = jax.lax.cond(
+            alive > 0.0,
+            lambda: _eval_pred_tile(cols_ref, col_ref[pidx], op_ref[pidx],
+                                    t1_ref[pidx], t2_ref[pidx],
+                                    rounds_ref[pidx]),
+            lambda: jnp.zeros((1, tile), bool),   # tile short-circuit
+        )
+        mask = jnp.logical_and(mask, res)
+    mask_ref[0, :] = mask[0].astype(jnp.int8)
+
+    # --------------------------------------------------------- monitor lane
+    # row mode (paper-exact): deterministic stride over the GLOBAL row index
+    # (paper §2.1). block mode (TPU-native, DESIGN §3.4): the same sampling
+    # FRACTION delivered as one contiguous 128-lane slice of every
+    # ``tile_stride``-th tile — scattered single rows cost a full vector op
+    # each on a VPU, a contiguous slice costs one.
+    row_sampled = ((gidx + sample_phase) % collect_rate) == 0
+    tile_stride = jnp.maximum(collect_rate * 128 // tile, 1)
+    block_tile = ((t + sample_phase) % tile_stride) == 0
+    block_sampled = jnp.logical_and(block_tile, lane < 128)
+    sampled = jnp.logical_and(
+        jnp.where(block_mode == 1, block_sampled, row_sampled), valid)
+    n_sampled = jnp.sum(sampled.astype(jnp.float32))
+    nmon_ref[0, 0] = n_sampled
+
+    @pl.when(n_sampled > 0.0)
+    def _monitor():
+        for p in range(n_preds):             # ALL predicates, user order
+            res = _eval_pred_tile(cols_ref, col_ref[p], op_ref[p],
+                                  t1_ref[p], t2_ref[p], rounds_ref[p])
+            cut = jnp.logical_and(sampled, jnp.logical_not(res))
+            cut_ref[0, p] = jnp.sum(cut.astype(jnp.float32))
+
+    @pl.when(n_sampled == 0.0)
+    def _no_monitor():
+        for p in range(n_preds):
+            cut_ref[0, p] = 0.0
+
+
+def filter_chain_pallas(columns: jnp.ndarray, specs, perm: jnp.ndarray,
+                        meta: jnp.ndarray, *, tile: int = DEFAULT_TILE,
+                        interpret: bool = True):
+    """Launch the fused chain kernel.
+
+    columns: f32[C, R_padded] with R_padded % tile == 0.
+    meta:    i32[3] = (n_rows_actual, collect_rate, sample_phase).
+    Returns (mask i8[1,Rp], active f32[n_tiles,P], cut f32[n_tiles,P],
+             nmon f32[n_tiles,1]).
+    """
+    n_cols, n_rows_p = columns.shape
+    if n_rows_p % tile:
+        raise ValueError(f"padded rows {n_rows_p} not a multiple of tile {tile}")
+    n_tiles = n_rows_p // tile
+    n_preds = int(specs.column.shape[0])
+
+    smem = functools.partial(pl.BlockSpec, memory_space=pltpu.SMEM)
+    grid = (n_tiles,)
+
+    kernel = functools.partial(_kernel, n_preds=n_preds, tile=tile)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            smem(), smem(), smem(), smem(), smem(), smem(), smem(),
+            pl.BlockSpec((n_cols, tile), lambda i: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, tile), lambda i: (0, i)),
+            pl.BlockSpec((1, n_preds), lambda i: (i, 0)),
+            pl.BlockSpec((1, n_preds), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, n_rows_p), jnp.int8),
+            jax.ShapeDtypeStruct((n_tiles, n_preds), jnp.float32),
+            jax.ShapeDtypeStruct((n_tiles, n_preds), jnp.float32),
+            jax.ShapeDtypeStruct((n_tiles, 1), jnp.float32),
+        ],
+        interpret=interpret,
+        name="adaptive_filter_chain",
+    )(specs.column, specs.op, specs.t1, specs.t2, specs.rounds, perm, meta,
+      columns)

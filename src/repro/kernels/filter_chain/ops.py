@@ -1,0 +1,66 @@
+"""jit'd wrapper around the fused filter-chain kernel.
+
+Handles padding to tile multiples, packs the SMEM meta scalars, launches the
+kernel, and reduces per-tile counters into the framework-wide
+``ChainResult`` contract shared with ``core.filter_exec`` (jnp path) and
+``ref.py`` (oracle). ``interpret=True`` on non-TPU backends, so the same
+call validates on CPU and runs compiled on TPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.filter_exec import ChainResult
+from repro.core.predicates import PredicateSpecs
+from repro.kernels.filter_chain.filter_chain import (DEFAULT_TILE,
+                                                     filter_chain_pallas)
+
+
+def _should_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("collect_rate", "tile", "monitor_mode"))
+def filter_chain(columns: jnp.ndarray, specs: PredicateSpecs,
+                 perm: jnp.ndarray, *, collect_rate: int,
+                 sample_phase, tile: int = DEFAULT_TILE,
+                 monitor_mode: str = "row") -> ChainResult:
+    """Fused adaptive chain over f32[C, R]; same contract as run_chain.
+
+    monitor_mode: "row" = the paper's stride sampling (bit-exact vs the
+    oracle); "block" = contiguous 128-lane slices of every Nth tile — the
+    same sampling fraction, vector-friendly on TPU (DESIGN §3.4).
+    """
+    if monitor_mode not in ("row", "block"):
+        raise ValueError(monitor_mode)
+    n_cols, n_rows = columns.shape
+    pad = (-n_rows) % tile
+    if pad:
+        columns = jnp.pad(columns, ((0, 0), (0, pad)))
+    meta = jnp.stack([jnp.asarray(n_rows, jnp.int32),
+                      jnp.asarray(collect_rate, jnp.int32),
+                      jnp.asarray(sample_phase, jnp.int32),
+                      jnp.asarray(1 if monitor_mode == "block" else 0,
+                                  jnp.int32)])
+
+    mask_i8, active, cut, nmon = filter_chain_pallas(
+        columns, specs, perm.astype(jnp.int32), meta, tile=tile,
+        interpret=_should_interpret())
+
+    active_before = jnp.sum(active, axis=0)                  # f32[P]
+    cost_in_order = specs.static_cost[perm]
+    work = jnp.sum(active_before * cost_in_order)
+    n_monitored = jnp.sum(nmon)
+    return ChainResult(
+        mask=mask_i8[0, :n_rows].astype(bool),
+        work_units=work,
+        active_before=active_before,
+        cut_counts=jnp.sum(cut, axis=0),
+        n_monitored=n_monitored,
+        monitor_cost=specs.static_cost * n_monitored,
+    )

@@ -1,0 +1,47 @@
+"""Pure-jnp oracle for the fused filter-chain kernel.
+
+Deliberately computed a *different* way from both the kernel and
+``core.filter_exec.run_chain``: the dense [P, R] outcome matrix is built
+up-front (no laziness, no tiling) and the chain is derived from prefix
+products — so a bug in the lazy/tiled paths cannot hide in the oracle.
+Row-level work accounting (the Spark model) falls out of the prefix masks.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import predicates as pred_lib
+from repro.core.filter_exec import ChainResult
+from repro.core.predicates import PredicateSpecs
+
+
+def filter_chain_ref(columns: jnp.ndarray, specs: PredicateSpecs,
+                     perm: jnp.ndarray, *, collect_rate: int,
+                     sample_phase) -> ChainResult:
+    n_rows = columns.shape[1]
+    outcomes = pred_lib.eval_all(specs, columns)          # bool[P, R]
+
+    ordered = outcomes[perm]                              # chain order
+    prefix = jnp.cumprod(ordered.astype(jnp.int32), axis=0)  # alive after k+1
+    mask = prefix[-1].astype(bool)
+
+    alive_after = jnp.sum(prefix, axis=1).astype(jnp.float32)   # f32[P]
+    active_before = jnp.concatenate(
+        [jnp.full((1,), float(n_rows), jnp.float32), alive_after[:-1]])
+    work = jnp.sum(active_before * specs.static_cost[perm])
+
+    # monitor lane: stride-sampled rows, ALL predicates (user order)
+    gidx = jnp.arange(n_rows, dtype=jnp.int32)
+    sampled = ((gidx + sample_phase) % collect_rate) == 0
+    cut = jnp.sum(jnp.logical_and(~outcomes, sampled[None, :]), axis=1)
+    n_monitored = jnp.sum(sampled).astype(jnp.float32)
+
+    return ChainResult(
+        mask=mask,
+        work_units=work,
+        active_before=active_before,
+        cut_counts=cut.astype(jnp.float32),
+        n_monitored=n_monitored,
+        monitor_cost=specs.static_cost * n_monitored,
+    )

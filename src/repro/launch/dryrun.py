@@ -1,0 +1,209 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# --- everything below may import jax ---------------------------------------
+import argparse
+import json
+import pathlib
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCHS, SHAPES, cell_is_runnable, get_config
+from repro.launch import hlo_analysis
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import make_cell
+from repro.launch.steps import make_decode_step, make_prefill_step, make_train_step
+
+# TPU v5e hardware constants (contract §ROOFLINE)
+PEAK_FLOPS = 197e12        # bf16 per chip
+HBM_BW = 819e9             # bytes/s per chip
+LINK_BW = 50e9             # bytes/s per ICI link
+
+ART_DIR = pathlib.Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+
+def lower_cell(arch: str, shape: str, multi_pod: bool, *, fsdp: bool = True,
+               cfg_override=None):
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    kind, args, model, cfg, opt_cfg = make_cell(arch, shape, mesh,
+                                                fsdp=fsdp, cfg=cfg_override)
+    if kind == "train":
+        step = make_train_step(model, opt_cfg)
+        donate = (0, 1)
+    elif kind == "prefill":
+        step = make_prefill_step(model)
+        donate = ()
+    else:
+        step = make_decode_step(model)
+        donate = (2,)
+
+    t0 = time.time()
+    with mesh:
+        lowered = jax.jit(step, donate_argnums=donate).lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    return mesh, n_chips, kind, cfg, compiled, t_lower, t_compile
+
+
+def analyze_cell(arch: str, shape: str, multi_pod: bool, *, fsdp: bool = True,
+                 cfg_override=None, tag: str = "") -> dict:
+    cell = SHAPES[shape]
+    mesh, n_chips, kind, cfg, compiled, t_lower, t_compile = lower_cell(
+        arch, shape, multi_pod, fsdp=fsdp, cfg_override=cfg_override)
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    loop_aware = hlo_analysis.analyze(hlo, default_group=n_chips)
+
+    # --- roofline terms (per-chip, seconds) --------------------------------
+    flops_chip = loop_aware["flops_per_chip"]
+    bytes_chip = loop_aware["hbm_bytes_per_chip"]
+    coll_chip = loop_aware["collective_wire_bytes_per_chip"]
+    t_compute = flops_chip / PEAK_FLOPS
+    t_memory = bytes_chip / HBM_BW
+    t_collective = coll_chip / LINK_BW
+    dominant = max(
+        (("compute", t_compute), ("memory", t_memory),
+         ("collective", t_collective)), key=lambda kv: kv[1])[0]
+
+    # --- analytic model FLOPs (contract: 6·N·D train / 2·N·D inference) ----
+    n_active = cfg.active_param_count()
+    if kind == "train":
+        tokens = cell.global_batch * cell.seq_len
+        model_flops = 6.0 * n_active * tokens
+    elif kind == "prefill":
+        tokens = cell.global_batch * cell.seq_len
+        model_flops = 2.0 * n_active * tokens
+    else:
+        model_flops = 2.0 * n_active * cell.global_batch
+    model_flops_chip = model_flops / n_chips
+
+    result = {
+        "arch": arch, "shape": shape,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "kind": kind, "n_chips": n_chips, "fsdp": fsdp, "tag": tag,
+        "status": "ok",
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "total_bytes": (mem.argument_size_in_bytes
+                            + mem.temp_size_in_bytes),
+        },
+        "xla_cost_analysis": {
+            "flops": cost.get("flops"),
+            "bytes_accessed": cost.get("bytes accessed"),
+        },
+        "loop_aware": loop_aware,
+        "roofline": {
+            "t_compute_s": t_compute,
+            "t_memory_s": t_memory,
+            "t_collective_s": t_collective,
+            "dominant": dominant,
+            "bound_s": max(t_compute, t_memory, t_collective),
+        },
+        "model_flops": model_flops,
+        "model_flops_per_chip": model_flops_chip,
+        "useful_flops_ratio": (model_flops_chip / flops_chip
+                               if flops_chip else None),
+        "mfu_upper_bound": (model_flops_chip / PEAK_FLOPS
+                            / max(t_compute, t_memory, t_collective)
+                            if max(t_compute, t_memory, t_collective) else None),
+    }
+    return result
+
+
+def cell_filename(arch, shape, multi_pod, tag=""):
+    mesh = "2x16x16" if multi_pod else "16x16"
+    suffix = f"__{tag}" if tag else ""
+    return ART_DIR / f"{arch}__{shape}__{mesh}{suffix}.json"
+
+
+def run_one(arch, shape, multi_pod, fsdp=True, tag=""):
+    runnable, why = cell_is_runnable(arch, shape)
+    ART_DIR.mkdir(parents=True, exist_ok=True)
+    out_path = cell_filename(arch, shape, multi_pod, tag)
+    if not runnable:
+        res = {"arch": arch, "shape": shape,
+               "mesh": "2x16x16" if multi_pod else "16x16",
+               "status": "skip", "why": why, "tag": tag}
+    else:
+        try:
+            res = analyze_cell(arch, shape, multi_pod, fsdp=fsdp, tag=tag)
+        except Exception as e:  # a failure here is a bug in the system
+            res = {"arch": arch, "shape": shape,
+                   "mesh": "2x16x16" if multi_pod else "16x16",
+                   "status": "error", "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc(), "tag": tag}
+    out_path.write_text(json.dumps(res, indent=2))
+    status = res["status"]
+    extra = ""
+    if status == "ok":
+        r = res["roofline"]
+        extra = (f" dominant={r['dominant']}"
+                 f" t=({r['t_compute_s']:.3e},{r['t_memory_s']:.3e},"
+                 f"{r['t_collective_s']:.3e})s"
+                 f" mem={res['memory']['total_bytes']/2**30:.1f}GiB/chip"
+                 f" compile={res['compile_s']:.0f}s")
+    elif status == "error":
+        extra = " " + res["error"].splitlines()[0]
+    print(f"[dryrun] {arch} × {shape} × "
+          f"{'2x16x16' if multi_pod else '16x16'}: {status}{extra}",
+          flush=True)
+    return res
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", choices=list(ARCHS))
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch × shape × mesh) cell in subprocesses")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--tag", default="", help="artifact suffix (perf exps)")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    if args.all:
+        import subprocess
+        failures = 0
+        for arch in ARCHS:
+            for shape in SHAPES:
+                for mesh in ("single", "multi"):
+                    mp = mesh == "multi"
+                    if args.skip_existing and \
+                            cell_filename(arch, shape, mp, args.tag).exists():
+                        continue
+                    cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                           "--arch", arch, "--shape", shape, "--mesh", mesh]
+                    if args.no_fsdp:
+                        cmd.append("--no-fsdp")
+                    if args.tag:
+                        cmd += ["--tag", args.tag]
+                    rc = subprocess.call(cmd)
+                    failures += rc != 0
+        print(f"[dryrun --all] done, {failures} subprocess failures")
+        return 1 if failures else 0
+
+    if not args.arch or not args.shape:
+        ap.error("--arch and --shape required (or --all)")
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}
+    rc = 0
+    for mp in meshes[args.mesh]:
+        res = run_one(args.arch, args.shape, mp, fsdp=not args.no_fsdp,
+                      tag=args.tag)
+        rc |= res["status"] == "error"
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

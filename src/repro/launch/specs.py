@@ -1,0 +1,96 @@
+"""ShapeDtypeStruct stand-ins + shardings for every (arch × shape × mesh)
+cell — no device allocation ever happens here (contract §MULTI-POD 2)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, get_config
+from repro.models.registry import build_model
+from repro.optim import AdamWConfig, init_opt_state
+from repro.parallel import sharding as shd
+
+SDS = jax.ShapeDtypeStruct
+
+
+def batch_struct(cfg, cell) -> dict:
+    """ShapeDtypeStructs for one input batch (mirrors registry.batch_for)."""
+    b, s = cell.global_batch, cell.seq_len
+    batch = {}
+    if cfg.embeds_input:
+        batch["embeds"] = SDS((b, s, cfg.d_model), jnp.bfloat16)
+        if cfg.family == "audio":
+            batch["enc_embeds"] = SDS((b, cfg.enc_seq, cfg.d_model),
+                                      jnp.bfloat16)
+    else:
+        batch["tokens"] = SDS((b, s), jnp.int32)
+    if cell.kind == "train":
+        batch["labels"] = SDS((b, s), jnp.int32)
+        if cfg.embeds_input:
+            batch.setdefault("tokens", SDS((b, s), jnp.int32))
+    if cfg.rope_style == "mrope":
+        batch["positions"] = SDS((3, b, s), jnp.int32)
+    return batch
+
+
+def _with_shardings(tree_shape, shardings):
+    return jax.tree.map(lambda sds, sh: SDS(sds.shape, sds.dtype, sharding=sh),
+                        tree_shape, shardings)
+
+
+def make_cell(arch: str, shape: str, mesh, *,
+              opt_cfg: AdamWConfig | None = None, fsdp: bool = True,
+              cfg=None):
+    """Returns (step_kind, args_sds_tuple, model, cfg) for lowering."""
+    cfg = cfg or get_config(arch)
+    cell = SHAPES[shape]
+    from repro.parallel import hints
+    hints.enable(dp=tuple(a for a in mesh.axis_names if a != "model"),
+                 tp="model", mesh=mesh)
+    model = build_model(cfg)
+    opt_cfg = opt_cfg or AdamWConfig(
+        state_dtype="bfloat16" if cfg.param_count() > 5e10 else "float32")
+
+    params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    p_sh = shd.params_shardings(params_shape, mesh, fsdp=fsdp)
+    params_sds = _with_shardings(params_shape, p_sh)
+
+    if cell.kind == "train":
+        opt_shape = jax.eval_shape(
+            lambda p: init_opt_state(p, opt_cfg), params_shape)
+        o_sh = (shd.params_shardings(opt_shape.m, mesh, fsdp=fsdp),
+                shd.params_shardings(opt_shape.v, mesh, fsdp=fsdp),
+                shd.replicated(mesh))
+        opt_sds = type(opt_shape)(
+            _with_shardings(opt_shape.m, o_sh[0]),
+            _with_shardings(opt_shape.v, o_sh[1]),
+            SDS(opt_shape.step.shape, opt_shape.step.dtype,
+                sharding=o_sh[2]))
+        batch_shape = batch_struct(cfg, cell)
+        b_sh = shd.batch_shardings(batch_shape, mesh, cell.global_batch)
+        batch_sds = _with_shardings(batch_shape, b_sh)
+        return "train", (params_sds, opt_sds, batch_sds), model, cfg, opt_cfg
+
+    if cell.kind == "prefill":
+        batch_shape = batch_struct(cfg, cell)
+        b_sh = shd.batch_shardings(batch_shape, mesh, cell.global_batch)
+        batch_sds = _with_shardings(batch_shape, b_sh)
+        return "prefill", (params_sds, batch_sds), model, cfg, opt_cfg
+
+    # decode: one new token against a seq_len cache
+    b = cell.global_batch
+    cache_shape = jax.eval_shape(
+        lambda: model.init_cache(b, cell.seq_len))
+    c_sh = shd.cache_shardings(cache_shape, mesh, b, cell.seq_len)
+    cache_sds = _with_shardings(cache_shape, c_sh)
+    if cfg.embeds_input:
+        tok = SDS((b, 1, cfg.d_model), jnp.bfloat16,
+                  sharding=shd.batch_shardings(
+                      SDS((b, 1, cfg.d_model), jnp.bfloat16), mesh, b))
+    else:
+        tok = SDS((b, 1), jnp.int32,
+                  sharding=shd.batch_shardings(
+                      SDS((b, 1), jnp.int32), mesh, b))
+    pos = SDS((), jnp.int32, sharding=shd.replicated(mesh))
+    return "decode", (params_sds, tok, cache_sds, pos), model, cfg, opt_cfg

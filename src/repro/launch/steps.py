@@ -1,0 +1,40 @@
+"""Jittable train / prefill / decode steps (what the dry-run lowers)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import AdamWConfig, adamw_update, cosine_schedule
+
+
+def make_train_step(model, opt_cfg: AdamWConfig, *, peak_lr=3e-4,
+                    warmup=2000, total=100_000, remat=True):
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            loss, metrics = model.train_loss(p, batch, remat=remat)
+            return loss, metrics
+
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        lr = cosine_schedule(opt_state.step, peak_lr=peak_lr,
+                             warmup_steps=warmup, total_steps=total)
+        params, opt_state, gnorm = adamw_update(params, grads, opt_state,
+                                                opt_cfg, lr)
+        out = {"loss": loss, "grad_norm": gnorm, "lr": lr}
+        out.update(metrics)
+        return params, opt_state, out
+
+    return train_step
+
+
+def make_prefill_step(model):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch)
+    return prefill_step
+
+
+def make_decode_step(model):
+    def decode_step(params, tokens, cache, pos):
+        return model.decode_step(params, tokens, cache, pos)
+    return decode_step

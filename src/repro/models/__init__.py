@@ -1,0 +1,5 @@
+"""Model zoo: the 10 assigned architectures on one scan-over-layers spine."""
+
+from repro.models.registry import build_model
+
+__all__ = ["build_model"]

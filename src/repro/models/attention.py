@@ -1,0 +1,258 @@
+"""Attention: GQA + chunked (flash-style) softmax, sliding window, softcap,
+MLA (DeepSeek latent attention) with compressed cache + absorbed decode.
+
+Training/prefill attention is an online-softmax scan over KV chunks — the
+[Sq, Sk] score matrix is never materialized beyond one [Sq, chunk] block, so
+32k prefill fits. Decode (q_len=1) uses a single einsum against the cache;
+with the cache's sequence axis sharded (SP), XLA partitions the softmax into
+the partial-max/partial-sum + all-reduce merge pattern (verified in the
+dry-run HLO; see EXPERIMENTS §Perf for the hand-tuned variant).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.common import apply_rope, dense_init, rms_norm, softcap, split
+
+NEG_INF = -1e30
+
+
+# ----------------------------------------------------------------- GQA params
+def init_attn(key, cfg):
+    d, h, kh, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    ks = split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, h * hd),
+        "wk": dense_init(ks[1], d, kh * hd),
+        "wv": dense_init(ks[2], d, kh * hd),
+        "wo": dense_init(ks[3], h * hd, d),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), common.PARAM_DTYPE)
+        p["bk"] = jnp.zeros((kh * hd,), common.PARAM_DTYPE)
+        p["bv"] = jnp.zeros((kh * hd,), common.PARAM_DTYPE)
+    return p
+
+
+def qkv(params, cfg, x, positions):
+    b, s, _ = x.shape
+    h, kh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    q = jnp.einsum("bsd,dk->bsk", x, params["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dk->bsk", x, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dk->bsk", x, params["wv"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(x.dtype)
+        k = k + params["bk"].astype(x.dtype)
+        v = v + params["bv"].astype(x.dtype)
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, s, kh, hd)
+    v = v.reshape(b, s, kh, hd)
+    q = apply_rope(q, positions, cfg.rope_theta, cfg.rope_style)
+    k = apply_rope(k, positions, cfg.rope_theta, cfg.rope_style)
+    return q, k, v
+
+
+# --------------------------------------------------- chunked flash attention
+def chunked_attention(q, k, v, *, causal=True, window=None, cap=None,
+                      chunk=1024, q_offset=0, scale=None):
+    """Online-softmax attention over KV chunks.
+
+    q: [B, Sq, H, Dq]; k: [B, Sk, Kh, Dq]; v: [B, Sk, Kh, Dv]; GQA via
+    H = Kh * G grouping. Accumulation in f32. Returns [B, Sq, H, Dv].
+    """
+    b, sq, h, dq = q.shape
+    sk, kh, dv = k.shape[1], k.shape[2], v.shape[-1]
+    g = h // kh
+    if scale is None:
+        scale = dq ** -0.5
+    chunk = min(chunk, sk)
+    sk_actual = sk
+    pad = (-sk) % chunk
+    if pad:                      # ragged tail (e.g. whisper's 1500 frames)
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        sk += pad
+    n_chunks = sk // chunk
+
+    # Attention sharding (§Perf iterations 2 & 5):
+    #  * HEAD-sharded when kv heads divide the TP degree (deepseek MLA:
+    #    128/128 heads): score/PV einsums AND their gradients are fully
+    #    local per head shard — no K/V gathers, no dK all-reduce; only the
+    #    standard wo all-reduce remains.
+    #  * otherwise CONTEXT-parallel: shard the QUERY SEQUENCE over the
+    #    model axis (head counts like 40q/8kv never divide 16, and GSPMD's
+    #    fallback partial-shards the score contraction — 33 TB of g=2
+    #    all-reduces for qwen2.5 prefill_32k). K/V chunks replicate (one
+    #    all-gather per chunk) and their grads all-reduce — still ~160×
+    #    less wire than the fallback.
+    from repro.parallel import hints
+    qg = q.reshape(b, sq, kh, g, dq)
+    kc = k.reshape(b, n_chunks, chunk, kh, dq)
+    vc = v.reshape(b, n_chunks, chunk, kh, dv)
+    tp = 1
+    if hints.enabled() and hints.mesh() is not None:
+        tp = hints.mesh().shape.get(hints.axes("tp"), 1)
+    if tp > 1 and kh % tp == 0:
+        qg = hints.constrain(qg, "dp", None, "tp", None, None)
+        kc = hints.constrain(kc, "dp", None, None, "tp", None)
+        vc = hints.constrain(vc, "dp", None, None, "tp", None)
+    elif sq > 1:
+        qg = hints.constrain(qg, "dp", "tp", None, None, None)
+        kc = hints.constrain(kc, "dp", None, None, None, None)
+        vc = hints.constrain(vc, "dp", None, None, None, None)
+    q_pos = q_offset + jnp.arange(sq, dtype=jnp.int32)
+
+    def body(carry, inputs):
+        m, l, acc = carry
+        ci, kch, vch = inputs
+        s = common.einsum_f32acc("bqkgd,bckd->bkgqc", qg, kch) * scale
+        s = softcap(s, cap)
+        k_pos = ci * chunk + jnp.arange(chunk, dtype=jnp.int32)
+        mask = jnp.broadcast_to((k_pos < sk_actual)[None, :], (sq, chunk))
+        if causal:
+            mask &= q_pos[:, None] >= k_pos[None, :]
+        if window is not None:
+            mask &= (q_pos[:, None] - k_pos[None, :]) < window
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        pv = common.einsum_f32acc("bkgqc,bckd->bkgqd",
+                                  p.astype(vch.dtype), vch)
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, kh, g, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kh, g, sq), jnp.float32)
+    a0 = jnp.zeros((b, kh, g, sq, dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0),
+        (jnp.arange(n_chunks), jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0)))
+
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = jnp.moveaxis(out, 3, 1).reshape(b, sq, h, dv)
+    if tp > 1 and kh % tp == 0:
+        out = hints.constrain(out, "dp", None, "tp", None)
+    elif sq > 1:
+        out = hints.constrain(out, "dp", "tp", None, None)
+    return out.astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, cur_len, *, window=None, cap=None,
+                     scale=None):
+    """One-token attention against a [B, Smax, Kh, D] cache.
+
+    Single einsum over the cache; under SP the cache's S axis is sharded and
+    the softmax partials merge with small all-reduces instead of gathering
+    the cache (DESIGN §6).
+    """
+    b, _, h, dq = q.shape
+    smax, kh, dv = k_cache.shape[1], k_cache.shape[2], v_cache.shape[-1]
+    g = h // kh
+    if scale is None:
+        scale = dq ** -0.5
+    qg = q.reshape(b, kh, g, dq)
+    s = common.einsum_f32acc("bkgd,bskd->bkgs", qg, k_cache) * scale
+    s = softcap(s, cap)
+    k_pos = jnp.arange(smax, dtype=jnp.int32)
+    mask = k_pos[None] < cur_len            # [1?, S] broadcast over b
+    if window is not None:
+        mask &= k_pos[None] >= (cur_len - window)
+    s = jnp.where(mask[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = common.einsum_f32acc("bkgs,bskd->bkgd",
+                               p.astype(v_cache.dtype), v_cache)
+    return out.reshape(b, 1, h, dv).astype(q.dtype)
+
+
+# --------------------------------------------------------------------- MLA
+def init_mla(key, cfg):
+    m, d, h = cfg.mla, cfg.d_model, cfg.n_heads
+    ks = split(key, 6)
+    return {
+        "wq_a": dense_init(ks[0], d, m.q_lora_rank),
+        "q_norm": jnp.zeros((m.q_lora_rank,), common.PARAM_DTYPE),
+        "wq_b": dense_init(ks[1], m.q_lora_rank,
+                           h * (m.qk_nope_dim + m.qk_rope_dim)),
+        "wkv_a": dense_init(ks[2], d, m.kv_lora_rank + m.qk_rope_dim),
+        "kv_norm": jnp.zeros((m.kv_lora_rank,), common.PARAM_DTYPE),
+        "wkv_b": dense_init(ks[3], m.kv_lora_rank,
+                            h * (m.qk_nope_dim + m.v_head_dim)),
+        "wo": dense_init(ks[4], h * m.v_head_dim, d),
+    }
+
+
+def mla_qcr(params, cfg, x, positions):
+    """Queries + compressed KV (the cacheable latents)."""
+    m, h = cfg.mla, cfg.n_heads
+    b, s, _ = x.shape
+    qa = rms_norm(jnp.einsum("bsd,dr->bsr", x, params["wq_a"].astype(x.dtype)),
+                  params["q_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsr,rk->bsk", qa, params["wq_b"].astype(x.dtype))
+    q = q.reshape(b, s, h, m.qk_nope_dim + m.qk_rope_dim)
+    q_nope, q_rope = q[..., :m.qk_nope_dim], q[..., m.qk_nope_dim:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta, "half")
+
+    kv_a = jnp.einsum("bsd,dr->bsr", x, params["wkv_a"].astype(x.dtype))
+    c_kv = rms_norm(kv_a[..., :m.kv_lora_rank], params["kv_norm"], cfg.norm_eps)
+    k_rope = kv_a[..., None, m.kv_lora_rank:]          # [B,S,1,rope] shared
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta, "half")[:, :, 0]
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_attention(params, cfg, x, positions, chunk):
+    """Training/prefill MLA: expand latents to per-head K/V, chunked attn."""
+    m, h = cfg.mla, cfg.n_heads
+    b, s, _ = x.shape
+    q_nope, q_rope, c_kv, k_rope = mla_qcr(params, cfg, x, positions)
+
+    kv = jnp.einsum("bsr,rk->bsk", c_kv, params["wkv_b"].astype(x.dtype))
+    kv = kv.reshape(b, s, h, m.qk_nope_dim + m.v_head_dim)
+    k_nope, v = kv[..., :m.qk_nope_dim], kv[..., m.qk_nope_dim:]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None],
+                                  (b, s, h, m.qk_rope_dim))], axis=-1)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    out = chunked_attention(q, k, v, causal=True, chunk=chunk)
+    out = out.reshape(b, s, h * m.v_head_dim)
+    return jnp.einsum("bsk,kd->bsd", out, params["wo"].astype(x.dtype)), \
+        c_kv, k_rope
+
+
+def mla_decode(params, cfg, x, pos, ckv_cache, krope_cache, cur_len):
+    """Absorbed-matrix decode: attention runs in the LATENT space — the cache
+    stays compressed ([S, kv_rank+rope] per token, the MLA memory win) and
+    W_uk / W_uv are folded into the query/output projections."""
+    m, h = cfg.mla, cfg.n_heads
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q_nope, q_rope, c_kv_new, k_rope_new = mla_qcr(params, cfg, x, positions)
+
+    ckv_cache = jax.lax.dynamic_update_slice_in_dim(
+        ckv_cache, c_kv_new.astype(ckv_cache.dtype), pos, axis=1)
+    krope_cache = jax.lax.dynamic_update_slice_in_dim(
+        krope_cache, k_rope_new.astype(krope_cache.dtype), pos, axis=1)
+
+    wkv_b = params["wkv_b"].reshape(
+        m.kv_lora_rank, h, m.qk_nope_dim + m.v_head_dim)
+    w_uk = wkv_b[..., :m.qk_nope_dim]                  # [r, H, nope]
+    w_uv = wkv_b[..., m.qk_nope_dim:]                  # [r, H, v]
+
+    q_lat = jnp.einsum("bshn,rhn->bshr", q_nope, w_uk.astype(x.dtype))
+    scale = (m.qk_nope_dim + m.qk_rope_dim) ** -0.5
+    s = (common.einsum_f32acc("bshr,bSr->bhsS", q_lat, ckv_cache)
+         + common.einsum_f32acc("bshr,bSr->bhsS", q_rope, krope_cache)) * scale
+    k_pos = jnp.arange(ckv_cache.shape[1], dtype=jnp.int32)
+    s = jnp.where((k_pos <= pos)[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    ctx_lat = common.einsum_f32acc(
+        "bhsS,bSr->bshr", p.astype(ckv_cache.dtype),
+        ckv_cache).astype(x.dtype)
+    out = jnp.einsum("bshr,rhv->bshv", ctx_lat, w_uv.astype(x.dtype))
+    out = out.reshape(b, 1, h * m.v_head_dim)
+    return jnp.einsum("bsk,kd->bsd", out, params["wo"].astype(x.dtype)), \
+        ckv_cache, krope_cache

@@ -1,0 +1,172 @@
+"""Shared model building blocks: norms, RoPE variants, softcap, init.
+
+Everything is functional — params are plain dict pytrees, layers are stacked
+on a leading L axis and consumed by ``jax.lax.scan`` (keeps HLO size and
+compile time independent of depth, which the 40-cell dry-run relies on).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+PARAM_DTYPE = jnp.bfloat16
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+# ---------------------------------------------------------------------- init
+def uniform_init(key, shape, scale, dtype=PARAM_DTYPE):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype) * scale
+
+
+def dense_init(key, d_in, d_out, dtype=PARAM_DTYPE):
+    return uniform_init(key, (d_in, d_out), d_in ** -0.5, dtype)
+
+
+def split(key, n):
+    return list(jax.random.split(key, n))
+
+
+# --------------------------------------------------------------------- norms
+def rms_norm(x, weight, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + weight.astype(jnp.float32))).astype(x.dtype)
+
+
+def layer_norm(x, weight, bias, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    out = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (out * weight + bias).astype(x.dtype)
+
+
+def softcap(x, cap):
+    """Gemma-2 logit soft-capping: cap * tanh(x / cap) (f32 for stability)."""
+    if cap is None:
+        return x
+    x32 = x.astype(jnp.float32)
+    return (cap * jnp.tanh(x32 / cap)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------- rope
+def rope_freqs(d_head: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, jnp.float32) / d_head))
+
+
+def apply_rope(x, positions, theta: float, style: str = "half"):
+    """Rotary embedding.
+
+    x: [..., S, H, D]; positions: i32[..., S] (or [3, ..., S] for mrope).
+    styles:
+      half         — rotate-half pairing (x[..:D/2], x[D/2:]) (llama/qwen)
+      interleaved  — adjacent-pair rotation on the FIRST HALF of dims only,
+                     second half pass-through (chatglm/glm 2d-rope)
+      mrope        — 3 position streams (t/h/w) over 3 dim sections (qwen2-vl)
+      none         — identity
+    """
+    if style == "none":
+        return x
+    d = x.shape[-1]
+
+    if style == "mrope":
+        # sections: [2,1,1]/4 of the rotary dims for (t, h, w), qwen2-vl style
+        sec = (d // 2, d // 4, d // 4)
+        pos_t, pos_h, pos_w = positions[0], positions[1], positions[2]
+        parts = []
+        off = 0
+        for p, width in zip((pos_t, pos_h, pos_w), sec):
+            parts.append(_rope_half(x[..., off:off + width], p, theta, width))
+            off += width
+        return jnp.concatenate(parts, axis=-1)
+
+    if style == "interleaved":
+        half = d // 2
+        rot = _rope_interleaved(x[..., :half], positions, theta, half)
+        return jnp.concatenate([rot, x[..., half:]], axis=-1)
+
+    return _rope_half(x, positions, theta, d)
+
+
+def _angles(positions, theta, d):
+    inv = 1.0 / (theta ** (jnp.arange(0, d, 2, jnp.float32) / d))
+    return positions[..., None].astype(jnp.float32) * inv  # [..., S, d/2]
+
+
+def _rope_half(x, positions, theta, d):
+    ang = _angles(positions, theta, d)[..., None, :]       # [..., S, 1, d/2]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., : d // 2], x[..., d // 2:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def _rope_interleaved(x, positions, theta, d):
+    ang = _angles(positions, theta, d)[..., None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1 = x[..., 0::2]
+    x2 = x[..., 1::2]
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    out = jnp.stack([r1, r2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+def einsum_f32acc(subs, a, b):
+    """Einsum with f32 accumulation. On TPU this is the native MXU mode
+    (bf16 inputs, f32 accumulate); the CPU interpreter cannot execute
+    mixed-precision dots, so there we cast inputs up instead."""
+    if jax.default_backend() == "cpu":
+        return jnp.einsum(subs, a.astype(jnp.float32), b.astype(jnp.float32))
+    return jnp.einsum(subs, a, b, preferred_element_type=jnp.float32)
+
+
+# ---------------------------------------------------------------------- misc
+def cross_entropy(logits, labels, final_cap=None):
+    """Token-mean CE in f32; optional gemma-2 final softcap."""
+    logits = softcap(logits, final_cap).astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def cross_entropy_chunked(x, table, tied, labels, final_cap=None,
+                          chunk: int = 512):
+    """CE without materializing [B, S, V] logits (§Perf iteration 7).
+
+    Scans over sequence chunks; each step computes a [B, chunk, V] logits
+    block, reduces it to per-token (logz − gold), and the block is
+    rematerialized in the backward pass (jax.checkpoint) instead of being
+    stored — for a 129k vocab at 1M tokens that removes a multi-GB f32
+    round-trip at the cost of one extra lm-head matmul in bwd.
+    """
+    b, s, d = x.shape
+    chunk = min(chunk, s)
+    if s % chunk:
+        return cross_entropy(unembed(x, table, tied), labels, final_cap)
+    n = s // chunk
+    xc = x.reshape(b, n, chunk, d).swapaxes(0, 1)
+    lc = labels.reshape(b, n, chunk).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def body(acc, inp):
+        xi, li = inp
+        logits = softcap(unembed(xi, table, tied), final_cap) \
+            .astype(jnp.float32)
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, li[..., None], axis=-1)[..., 0]
+        return acc + jnp.sum(logz - gold), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (xc, lc))
+    return total / (b * s)
+
+
+def embed(tokens, table):
+    return jnp.take(table, tokens, axis=0).astype(COMPUTE_DTYPE)
+
+
+def unembed(x, table, tied: bool):
+    w = table.T if tied else table
+    return jnp.einsum("...d,dv->...v", x, w.astype(x.dtype))

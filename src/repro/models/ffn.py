@@ -1,0 +1,24 @@
+"""Dense FFN (SwiGLU) — the default MLP for all non-MoE blocks."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, split
+
+
+def init_ffn(key, d_model: int, d_ff: int):
+    ks = split(key, 3)
+    return {
+        "w_gate": dense_init(ks[0], d_model, d_ff),
+        "w_up": dense_init(ks[1], d_model, d_ff),
+        "w_down": dense_init(ks[2], d_ff, d_model),
+    }
+
+
+def ffn(params, x):
+    g = jnp.einsum("bsd,df->bsf", x, params["w_gate"].astype(x.dtype))
+    u = jnp.einsum("bsd,df->bsf", x, params["w_up"].astype(x.dtype))
+    h = jax.nn.silu(g) * u
+    return jnp.einsum("bsf,fd->bsd", h, params["w_down"].astype(x.dtype))

@@ -1,0 +1,64 @@
+"""Uniform model API used by the launcher, tests and examples."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import serving, transformer as tfm
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelApi:
+    cfg: Any
+    init: Callable          # key -> params
+    train_loss: Callable    # (params, batch) -> (loss, metrics)
+    prefill: Callable       # (params, batch) -> (last_logits, cache)
+    decode_step: Callable   # (params, tokens, cache, pos) -> (logits, cache)
+    init_cache: Callable    # (batch, capacity) -> cache
+
+
+def build_model(cfg) -> ModelApi:
+    return ModelApi(
+        cfg=cfg,
+        init=lambda key: tfm.init_params(key, cfg),
+        train_loss=lambda params, batch, remat=True: tfm.train_loss(
+            params, cfg, batch, remat=remat),
+        prefill=lambda params, batch: serving.prefill(params, cfg, batch),
+        decode_step=lambda params, tokens, cache, pos: serving.decode_step(
+            params, cfg, tokens, cache, pos),
+        init_cache=lambda batch, capacity: serving.init_cache(
+            cfg, batch, capacity),
+    )
+
+
+def batch_for(cfg, batch_size: int, seq_len: int, *, kind: str = "train",
+              key=None):
+    """Concrete (smoke-test) batch for any family; mirrors
+    ``launch.specs.input_specs`` which builds the ShapeDtypeStruct twins."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 4)
+    batch = {}
+    if cfg.embeds_input:
+        batch["embeds"] = jax.random.normal(
+            ks[0], (batch_size, seq_len, cfg.d_model), jnp.bfloat16)
+        if cfg.family == "audio":
+            batch["enc_embeds"] = jax.random.normal(
+                ks[1], (batch_size, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+    else:
+        batch["tokens"] = jax.random.randint(
+            ks[0], (batch_size, seq_len), 0, cfg.vocab, jnp.int32)
+    if kind == "train":
+        batch["labels"] = jax.random.randint(
+            ks[2], (batch_size, seq_len), 0, cfg.vocab, jnp.int32)
+        if cfg.embeds_input:   # loss still over vocab for backbone stubs
+            batch.setdefault("tokens", jax.random.randint(
+                ks[3], (batch_size, seq_len), 0, cfg.vocab, jnp.int32))
+    if cfg.rope_style == "mrope":
+        pos = jnp.broadcast_to(jnp.arange(seq_len, dtype=jnp.int32),
+                               (batch_size, seq_len))
+        batch["positions"] = jnp.stack([pos, pos, pos])  # t/h/w streams
+    return batch

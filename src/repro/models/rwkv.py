@@ -1,0 +1,161 @@
+"""RWKV-6 ("Finch") — attention-free, data-dependent decay.
+
+Time-mix: token-shift ddlerp (low-rank data-dependent interpolation with the
+previous token), per-channel decay w = exp(-exp(·)) produced by a LoRA from
+the shifted input, and the WKV state recurrence
+
+    S_t = diag(w_t) · S_{t-1} + k_t v_tᵀ
+    o_t = r_t · (S_{t-1} + diag(u) k_t v_tᵀ)
+
+carried per head by ``lax.scan`` over the sequence (sequential form — the
+chunked-parallel form is a §Perf candidate). Decode is the O(1)-state single
+step, which is why this arch runs the long_500k cell.
+
+Channel-mix: shifted squared-ReLU MLP with receptance gate (RWKV standard).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, split, layer_norm
+
+LORA_RANK = 32
+
+
+def _head_dims(cfg):
+    nh = cfg.n_heads
+    hd = cfg.d_model // nh
+    return nh, hd
+
+
+def init_rwkv_block(key, cfg):
+    d, f = cfg.d_model, cfg.d_ff
+    nh, hd = _head_dims(cfg)
+    ks = split(key, 12)
+    zeros = lambda *sh: jnp.zeros(sh, jnp.bfloat16)
+    return {
+        # time-mix
+        "ln1_w": zeros(d) + 1.0, "ln1_b": zeros(d),
+        "mu_base": zeros(d),                  # base token-shift mix
+        "mu_rkvgw": zeros(5, d),              # per-stream mixes
+        "lora_a": dense_init(ks[0], d, 5 * LORA_RANK),
+        "lora_b": dense_init(ks[1], 5 * LORA_RANK, 5 * d) * 0.0,
+        "wr": dense_init(ks[2], d, d),
+        "wk": dense_init(ks[3], d, d),
+        "wv": dense_init(ks[4], d, d),
+        "wg": dense_init(ks[5], d, d),
+        "w0": zeros(d) - 4.0,                 # decay bias (w ≈ exp(-e^-4)≈1)
+        "wa": dense_init(ks[6], d, LORA_RANK),
+        "wb": dense_init(ks[7], LORA_RANK, d) * 0.0,
+        "u": zeros(nh, hd),                   # bonus for current token
+        "wo": dense_init(ks[8], d, d),
+        "gn_w": zeros(d) + 1.0, "gn_b": zeros(d),
+        # channel-mix
+        "ln2_w": zeros(d) + 1.0, "ln2_b": zeros(d),
+        "mu_ck": zeros(d), "mu_cr": zeros(d),
+        "ck": dense_init(ks[9], d, f),
+        "cv": dense_init(ks[10], f, d),
+        "cr": dense_init(ks[11], d, d),
+    }
+
+
+def _shift(x, x_prev):
+    """Token shift: x_{t-1} (first position takes carry-in x_prev [B,D])."""
+    return jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)
+
+
+def time_mix(p, cfg, x, x_prev, state):
+    """x: [B,S,D]; x_prev: [B,D] carry; state: [B,H,hd,hd] WKV state.
+    Returns (out, new_x_prev, new_state)."""
+    nh, hd = _head_dims(cfg)
+    b, s, d = x.shape
+    xs = _shift(x, x_prev)
+    xx = xs - x
+    xb = x + xx * p["mu_base"].astype(x.dtype)
+    # data-dependent per-stream mixes (ddlerp)
+    from repro.parallel import hints
+    lora = jnp.tanh(jnp.einsum("bsd,dr->bsr", xb, p["lora_a"].astype(x.dtype)))
+    dd = jnp.einsum("bsr,rk->bsk", lora, p["lora_b"].astype(x.dtype))
+    # keep the ddlerp mix model-replicated: it multiplies the replicated
+    # residual stream elementwise (sharded, it forced 1.7 TB f32 gathers)
+    dd = hints.constrain(dd.reshape(b, s, 5, d), "dp", None, None, None)
+    mix = p["mu_rkvgw"].astype(x.dtype)[None, None] + dd     # [B,S,5,D]
+    xr, xk, xv, xg, xw = [x + xx * mix[:, :, i] for i in range(5)]
+
+    r = jnp.einsum("bsd,dk->bsk", xr, p["wr"].astype(x.dtype))
+    k = jnp.einsum("bsd,dk->bsk", xk, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dk->bsk", xv, p["wv"].astype(x.dtype))
+    g = jax.nn.silu(jnp.einsum("bsd,dk->bsk", xg, p["wg"].astype(x.dtype)))
+    g = hints.constrain(g, "dp", None, None)
+    wlora = jnp.einsum("bsr,rk->bsk",
+                       jnp.tanh(jnp.einsum("bsd,dr->bsr", xw,
+                                           p["wa"].astype(x.dtype))),
+                       p["wb"].astype(x.dtype))
+    wlora = hints.constrain(wlora, "dp", None, None)
+    logw = p["w0"].astype(jnp.float32)[None, None] + wlora.astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(logw))                               # (0,1) decay
+
+    # §Perf iteration 3: the WKV recurrence is cheap (O(S·D·hd)) next to the
+    # projections (O(S·D²)) but its 40-head layout doesn't divide a 16-way
+    # model axis — GSPMD was all-gathering 1.7 TB of ddlerp tensors per
+    # layer. Pin the scan to model-REPLICATED (TP stays on the projections,
+    # which carry the FLOPs); redundant scan compute is ~1% of layer FLOPs.
+    rh = hints.constrain(r.reshape(b, s, nh, hd), "dp", None, None, None)
+    kh = hints.constrain(k.reshape(b, s, nh, hd), "dp", None, None, None)
+    vh = hints.constrain(v.reshape(b, s, nh, hd), "dp", None, None, None)
+    wh = hints.constrain(w.reshape(b, s, nh, hd), "dp", None, None, None)
+    u = p["u"].astype(jnp.float32)
+
+    # §Perf iteration 6: scan xs streamed in bf16 (r/k/v) — halves the
+    # dominant per-step HBM traffic; the STATE and decay stay f32 (the
+    # recurrence is precision-sensitive through long products).
+    def step(S, inp):
+        rt, kt, vt, wt = inp                                  # [B,H,hd]
+        rt, kt, vt = (a.astype(jnp.float32) for a in (rt, kt, vt))
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        out = jnp.einsum("bhk,bhkv->bhv", rt, S + u[None, :, :, None] * kv)
+        S_new = wt[..., None] * S + kv
+        return S_new, out.astype(jnp.bfloat16)
+
+    xs_seq = tuple(jnp.moveaxis(a, 1, 0) for a in (rh, kh, vh, wh))
+    state, outs = jax.lax.scan(step, state, xs_seq)
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, s, d)           # bf16
+
+    out = layer_norm(out, p["gn_w"].astype(jnp.float32),
+                     p["gn_b"].astype(jnp.float32), cfg.norm_eps)
+    out = (out.astype(x.dtype) * g)
+    out = jnp.einsum("bsd,dk->bsk", out, p["wo"].astype(x.dtype))
+    return out, x[:, -1], state
+
+
+def channel_mix(p, cfg, x, x_prev):
+    xs = _shift(x, x_prev)
+    xx = xs - x
+    xk = x + xx * p["mu_ck"].astype(x.dtype)
+    xr = x + xx * p["mu_cr"].astype(x.dtype)
+    k = jnp.einsum("bsd,df->bsf", xk, p["ck"].astype(x.dtype))
+    k = jnp.square(jax.nn.relu(k))
+    kv = jnp.einsum("bsf,fd->bsd", k, p["cv"].astype(x.dtype))
+    r = jax.nn.sigmoid(jnp.einsum("bsd,dk->bsk", xr, p["cr"].astype(x.dtype)))
+    return r * kv, x[:, -1]
+
+
+def rwkv_block(p, cfg, x, carry):
+    """carry = (x_prev_att [B,D], x_prev_ffn [B,D], wkv_state [B,H,hd,hd])."""
+    xa_prev, xf_prev, state = carry
+    h = layer_norm(x, p["ln1_w"], p["ln1_b"], cfg.norm_eps)
+    att, xa_new, state = time_mix(p, cfg, h, xa_prev, state)
+    x = x + att
+    h = layer_norm(x, p["ln2_w"], p["ln2_b"], cfg.norm_eps)
+    ff, xf_new = channel_mix(p, cfg, h, xf_prev)
+    x = x + ff
+    return x, (xa_new, xf_new, state)
+
+
+def init_rwkv_carry(cfg, batch):
+    nh, hd = _head_dims(cfg)
+    return (jnp.zeros((batch, cfg.d_model), jnp.bfloat16),
+            jnp.zeros((batch, cfg.d_model), jnp.bfloat16),
+            jnp.zeros((batch, nh, hd, hd), jnp.float32))

@@ -1,0 +1,153 @@
+"""Serving paths: cache construction, prefill, one-token decode.
+
+``decode_step`` is what the decode_32k / long_500k dry-run cells lower: one
+new token against a seq_len-capacity cache. Caches are stacked per layer so
+the decode layer loop is a ``lax.scan`` over (layer_params, layer_cache).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_lib
+from repro.models import common, rwkv as rwkv_lib, ssm as ssm_lib
+from repro.models import transformer as tfm
+from repro.models.common import embed, rms_norm
+
+
+# ============================================================== cache init
+def init_cache(cfg, batch: int, capacity: int):
+    """Zero cache with ``capacity`` sequence slots (family-specific pytree)."""
+    L, kh, hd = cfg.n_layers, cfg.n_kv_heads, cfg.d_head
+    bf = common.PARAM_DTYPE
+    if cfg.family == "ssm":
+        nh, rhd = cfg.n_heads, cfg.d_model // cfg.n_heads
+        return (jnp.zeros((L, batch, cfg.d_model), bf),
+                jnp.zeros((L, batch, cfg.d_model), bf),
+                jnp.zeros((L, batch, nh, rhd, rhd), jnp.float32))
+    if cfg.family == "hybrid":
+        d_inner = cfg.ssm.expand * cfg.d_model
+        nh = d_inner // cfg.ssm.head_dim
+        conv_dim = d_inner + 2 * cfg.ssm.n_groups * cfg.ssm.d_state
+        n_apps = cfg.n_layers // cfg.hybrid_attn_every
+        ssm_c = (jnp.zeros((L, batch, nh, cfg.ssm.head_dim, cfg.ssm.d_state),
+                           jnp.float32),
+                 jnp.zeros((L, batch, cfg.ssm.d_conv - 1, conv_dim), bf))
+        attn_c = (jnp.zeros((n_apps, batch, capacity, kh, hd), bf),
+                  jnp.zeros((n_apps, batch, capacity, kh, hd), bf))
+        return (ssm_c, attn_c)
+    if cfg.mla is not None:
+        m = cfg.mla
+        return (jnp.zeros((L, batch, capacity, m.kv_lora_rank), bf),
+                jnp.zeros((L, batch, capacity, m.qk_rope_dim), bf))
+    if cfg.family == "audio":
+        self_kv = (jnp.zeros((L, batch, capacity, kh, hd), bf),
+                   jnp.zeros((L, batch, capacity, kh, hd), bf))
+        cross_kv = (jnp.zeros((L, batch, cfg.enc_seq, kh, hd), bf),
+                    jnp.zeros((L, batch, cfg.enc_seq, kh, hd), bf))
+        return (self_kv, cross_kv)
+    return (jnp.zeros((L, batch, capacity, kh, hd), bf),
+            jnp.zeros((L, batch, capacity, kh, hd), bf))
+
+
+# ================================================================= prefill
+def prefill(params, cfg, batch):
+    """Full-sequence pass building the cache; returns last-position logits
+    (the [B, V] sampler input — the full [B, S, V] logits are never
+    materialized, DESIGN §6) plus the cache at capacity == S."""
+    x, _, cache = tfm.forward(params, cfg, batch, mode="prefill", remat=False)
+    logits = tfm.logits_from_hidden(params, cfg, x[:, -1:])
+    return logits[:, 0], cache
+
+
+# ============================================================== decode step
+def decode_step(params, cfg, tokens, cache, pos):
+    """tokens: i32[B, 1] (or embeds [B,1,D] for embeds_input archs).
+    Returns (logits [B, V], new cache)."""
+    if cfg.embeds_input and tokens.ndim == 3:
+        x = tokens.astype(common.COMPUTE_DTYPE)
+    else:
+        x = embed(tokens, params["embed"])
+
+    if cfg.family == "ssm":
+        x, cache = _decode_rwkv(params, cfg, x, cache)
+    elif cfg.family == "hybrid":
+        x, cache = _decode_hybrid(params, cfg, x, cache, pos)
+    elif cfg.family == "audio":
+        x, cache = _decode_whisper(params, cfg, x, cache, pos)
+    else:
+        x, cache = _decode_attn(params, cfg, x, cache, pos)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = tfm.logits_from_hidden(params, cfg, x)
+    from repro.models.common import softcap
+    return softcap(logits[:, 0], cfg.final_softcap), cache
+
+
+def _decode_attn(params, cfg, x, cache, pos):
+    def body(xc, inp):
+        lp, lcache, idx = inp
+        xn, new_cache = tfm.attn_layer_decode(lp, cfg, xc, pos, lcache, idx)
+        return xn, new_cache
+    x, cache = jax.lax.scan(
+        body, x, (params["layers"], cache, jnp.arange(cfg.n_layers)))
+    return x, cache
+
+
+def _decode_rwkv(params, cfg, x, cache):
+    def body(xc, inp):
+        lp, carry = inp
+        xn, carry = rwkv_lib.rwkv_block(lp, cfg, xc, carry)
+        return xn, carry
+    x, cache = jax.lax.scan(body, x, (params["layers"], cache))
+    return x, cache
+
+
+def _decode_hybrid(params, cfg, x, cache, pos):
+    (ssm_h, ssm_conv), (ak, av) = cache
+    every = cfg.hybrid_attn_every or cfg.n_layers
+    n_groups = cfg.n_layers // every
+    grouped = jax.tree.map(
+        lambda a: a.reshape(n_groups, every, *a.shape[1:]), params["layers"])
+    gh = ssm_h.reshape(n_groups, every, *ssm_h.shape[1:])
+    gc = ssm_conv.reshape(n_groups, every, *ssm_conv.shape[1:])
+
+    def mamba_body(xc, inp):
+        lp, h, conv = inp
+        y, (h2, conv2) = ssm_lib.mamba2_forward(lp, cfg, xc, ssm_state=h,
+                                                conv_state=conv)
+        return xc + y, (h2, conv2)
+
+    new_h, new_c, new_ak, new_av = [], [], [], []
+    for gi in range(n_groups):
+        gp = jax.tree.map(lambda a: a[gi], grouped)
+        x, (h2, c2) = jax.lax.scan(mamba_body, x, (gp, gh[gi], gc[gi]))
+        x, kv = tfm.attn_layer_decode(params["shared_attn"], cfg, x, pos,
+                                      (ak[gi], av[gi]), jnp.asarray(gi))
+        new_h.append(h2); new_c.append(c2)
+        new_ak.append(kv[0]); new_av.append(kv[1])
+    cache = ((jnp.concatenate(new_h), jnp.concatenate(new_c)),
+             (jnp.stack(new_ak), jnp.stack(new_av)))
+    return x, cache
+
+
+def _decode_whisper(params, cfg, x, cache, pos):
+    self_kv, cross_kv = cache
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+
+    def body(xc, inp):
+        lp, (sk, sv), (ck, cv) = inp
+        xn, (sk, sv) = tfm.attn_layer_decode(lp, cfg, xc, pos, (sk, sv),
+                                             jnp.zeros((), jnp.int32))
+        h = rms_norm(xn, lp["xnorm"], cfg.norm_eps)
+        q, _, _ = attn_lib.qkv(lp["xattn"], cfg, h, positions)
+        o = attn_lib.decode_attention(q, ck, cv, ck.shape[1])
+        o = o.reshape(b, 1, cfg.n_heads * cfg.d_head)
+        xn = xn + jnp.einsum("bsk,kd->bsd", o,
+                             lp["xattn"]["wo"].astype(xn.dtype))
+        return xn, ((sk, sv), (ck, cv))
+
+    x, cache = jax.lax.scan(body, x, (params["layers"], self_kv, cross_kv))
+    return x, cache

@@ -1,0 +1,161 @@
+"""Mamba-2 (SSD) block — chunked state-space duality algorithm.
+
+Training/prefill uses the chunked SSD form: within a chunk the recurrence is
+expanded into a (masked, decay-weighted) quadratic form that feeds the MXU;
+across chunks a ``lax.scan`` carries the [B, H, P, N] state. Decode is the
+O(1)-state single-step recurrence — the reason SSM archs run the long_500k
+cell that full attention cannot (DESIGN §5).
+
+Shapes: d_inner = expand·d_model, H = d_inner / head_dim (P), N = d_state.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, split, rms_norm
+
+
+def _dims(cfg):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    return d_inner, n_heads, s.head_dim, s.d_state, s.n_groups
+
+
+def init_mamba2(key, cfg):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner, nh, p, n, g = _dims(cfg)
+    conv_dim = d_inner + 2 * g * n
+    ks = split(key, 4)
+    return {
+        # order: [z | x | B | C | dt]
+        "in_proj": dense_init(ks[0], d, 2 * d_inner + 2 * g * n + nh),
+        "conv_w": dense_init(ks[1], s.d_conv, conv_dim),   # depthwise
+        "conv_b": jnp.zeros((conv_dim,), jnp.bfloat16),
+        "A_log": jnp.zeros((nh,), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm": jnp.zeros((d_inner,), jnp.bfloat16),
+        "out_proj": dense_init(ks[2], d_inner, d),
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv over seq. x: [B,S,C]; w: [K,C]. If ``state``
+    ([B, K-1, C]) is given, runs one decode step and returns (y, new_state)."""
+    k = w.shape[0]
+    if state is not None:                      # decode: x is [B,1,C]
+        window = jnp.concatenate([state, x], axis=1)        # [B,K,C]
+        y = jnp.einsum("bkc,kc->bc", window, w.astype(x.dtype)) + b
+        return y[:, None], window[:, 1:]
+    pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    windows = jnp.stack([xp[:, i:i + x.shape[1]] for i in range(k)], axis=2)
+    y = jnp.einsum("bskc,kc->bsc", windows, w.astype(x.dtype)) + b
+    return y, None
+
+
+def _split_proj(cfg, zxbcdt):
+    d_inner, nh, p, n, g = _dims(cfg)
+    z, x, bc, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + 2 * g * n], axis=-1)
+    return z, x, bc, dt
+
+
+def ssd_chunked(xh, dt, a_log, bmat, cmat, d_skip, chunk):
+    """Chunked SSD. xh:[B,S,H,P] dt:[B,S,H] bmat/cmat:[B,S,H,N] (groups
+    pre-broadcast). Returns (y:[B,S,H,P], final_state:[B,H,P,N])."""
+    b, s, h, p = xh.shape
+    n = bmat.shape[-1]
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    nc = s // chunk
+    a = -jnp.exp(a_log.astype(jnp.float32))               # [H]
+    da = dt * a                                           # [B,S,H]
+
+    def per_chunk(h_prev, inp):
+        xc, dtc, dac, bc, cc = inp                        # [B,chunk,...]
+        cum = jnp.cumsum(dac, axis=1)                     # [B,chunk,H]
+        total = cum[:, -1]                                # [B,H]
+        # intra-chunk quadratic (decay-masked attention-like form)
+        rel = cum[:, :, None, :] - cum[:, None, :, :]     # [B,i,j,H]
+        iota = jnp.arange(chunk)
+        causal = iota[:, None] >= iota[None, :]
+        lmat = jnp.where(causal[None, :, :, None], jnp.exp(rel), 0.0)
+        scores = jnp.einsum("bihn,bjhn->bijh", cc, bc,
+                            preferred_element_type=jnp.float32)
+        w = scores * lmat * dtc[:, None, :, :]            # weight for j→i
+        y_intra = jnp.einsum("bijh,bjhp->bihp", w, xh_f(xc))
+        # inter-chunk: contribution of carried state
+        y_inter = jnp.einsum("bihn,bhpn->bihp",
+                             cc * jnp.exp(cum)[..., None], h_prev)
+        # state update
+        decay_to_end = jnp.exp(total[:, None] - cum)      # [B,chunk,H]
+        upd = jnp.einsum("bjhn,bjhp->bhpn",
+                         bc * (dtc * decay_to_end)[..., None], xh_f(xc))
+        h_new = h_prev * jnp.exp(total)[..., None, None] + upd
+        y = y_intra + y_inter + d_skip[None, None, :, None] * xh_f(xc)
+        return h_new, y
+
+    def xh_f(x):
+        return x.astype(jnp.float32)
+
+    xs = (xh.reshape(b, nc, chunk, h, p).swapaxes(0, 1),
+          dt.reshape(b, nc, chunk, h).swapaxes(0, 1),
+          da.reshape(b, nc, chunk, h).swapaxes(0, 1),
+          bmat.reshape(b, nc, chunk, h, n).swapaxes(0, 1),
+          cmat.reshape(b, nc, chunk, h, n).swapaxes(0, 1))
+    h0 = jnp.zeros((b, h, p, n), jnp.float32)
+    h_final, ys = jax.lax.scan(per_chunk, h0, xs)
+    y = ys.swapaxes(0, 1).reshape(b, s, h, p)
+    return y.astype(xh.dtype), h_final
+
+
+def mamba2_forward(params, cfg, x, ssm_state=None, conv_state=None):
+    """Full block. Train/prefill: ssm_state=None → returns (y, (h, conv)).
+    Decode: pass (ssm_state, conv_state), x is [B,1,D]."""
+    s = cfg.ssm
+    d_inner, nh, p, n, g = _dims(cfg)
+    decode = ssm_state is not None
+
+    zxbcdt = jnp.einsum("bsd,dk->bsk", x, params["in_proj"].astype(x.dtype))
+    z, xc, bc, dt = _split_proj(cfg, zxbcdt)
+
+    conv_in = jnp.concatenate([xc, bc], axis=-1)
+    conv_out, new_conv = _causal_conv(conv_in, params["conv_w"],
+                                      params["conv_b"].astype(x.dtype),
+                                      state=conv_state if decode else None)
+    if not decode:  # keep the conv tail so prefill can hand off to decode
+        new_conv = conv_in[:, -(s.d_conv - 1):]
+    conv_out = jax.nn.silu(conv_out)
+    xc = conv_out[..., :d_inner]
+    bmat, cmat = jnp.split(conv_out[..., d_inner:], 2, axis=-1)  # [B,S,G*N]
+
+    bsz, seq = x.shape[0], x.shape[1]
+    xh = xc.reshape(bsz, seq, nh, p)
+    rep = nh // g
+    bmat = jnp.repeat(bmat.reshape(bsz, seq, g, n), rep, axis=2)
+    cmat = jnp.repeat(cmat.reshape(bsz, seq, g, n), rep, axis=2)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"][None, None])        # [B,S,H]
+
+    if decode:
+        a = -jnp.exp(params["A_log"].astype(jnp.float32))
+        dac = jnp.exp(dt[:, 0] * a)                              # [B,H]
+        upd = jnp.einsum("bhn,bhp->bhpn", bmat[:, 0] * dt[:, 0, :, None],
+                         xh[:, 0].astype(jnp.float32))
+        h_new = ssm_state * dac[..., None, None] + upd
+        y = jnp.einsum("bhn,bhpn->bhp", cmat[:, 0], h_new) \
+            + params["D"][None, :, None] * xh[:, 0].astype(jnp.float32)
+        y = y[:, None]                                           # [B,1,H,P]
+    else:
+        y, h_new = ssd_chunked(xh, dt, params["A_log"], bmat, cmat,
+                               params["D"], s.chunk)
+
+    y = y.astype(x.dtype).reshape(bsz, seq, d_inner)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)
+    out = jnp.einsum("bsk,kd->bsd", y, params["out_proj"].astype(x.dtype))
+    return out, (h_new, new_conv)

@@ -1,0 +1,355 @@
+"""The decoder spine: every assigned arch on one scan-over-layers skeleton.
+
+Families:
+  dense / vlm      — (MLA|GQA) attention + SwiGLU FFN
+  moe              — attention + MoE FFN (+ shared experts, + MTP head)
+  ssm              — RWKV6 blocks (attention-free)
+  hybrid           — Mamba2 blocks + ONE shared attention block applied every
+                     ``hybrid_attn_every`` layers (Zamba2)
+  audio            — whisper enc-dec (encoder over stub frame embeddings)
+
+Per-layer params are stacked on a leading axis and consumed by ``lax.scan``:
+HLO size and compile time are depth-independent (the 40-cell × 2-mesh
+dry-run depends on this). The train path wraps the scan body in
+``jax.checkpoint`` (full remat baseline; policy is a §Perf knob).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_lib
+from repro.models import common, ffn as ffn_lib, moe as moe_lib
+from repro.models import rwkv as rwkv_lib, ssm as ssm_lib
+from repro.models.common import (cross_entropy, dense_init, embed, rms_norm,
+                                 softcap, split, unembed)
+
+BIG_WINDOW = 1 << 30   # "no window" as a dynamic value
+
+
+# ============================================================== param init
+def init_attn_layer(key, cfg):
+    """One (attention|MLA) + (FFN|MoE) layer."""
+    ks = split(key, 4)
+    p = {"norm1": jnp.zeros((cfg.d_model,), common.PARAM_DTYPE),
+         "norm2": jnp.zeros((cfg.d_model,), common.PARAM_DTYPE)}
+    if cfg.post_norm:
+        p["post1"] = jnp.zeros((cfg.d_model,), common.PARAM_DTYPE)
+        p["post2"] = jnp.zeros((cfg.d_model,), common.PARAM_DTYPE)
+    if cfg.mla is not None:
+        p["attn"] = attn_lib.init_mla(ks[0], cfg)
+    else:
+        p["attn"] = attn_lib.init_attn(ks[0], cfg)
+    if cfg.moe is not None:
+        p["moe"] = moe_lib.init_moe(ks[1], cfg)
+    else:
+        p["ffn"] = ffn_lib.init_ffn(ks[1], cfg.d_model, cfg.d_ff)
+    return p
+
+
+def init_params(key, cfg):
+    ks = split(key, 8)
+    p: dict[str, Any] = {
+        "embed": common.uniform_init(ks[0], (cfg.vocab, cfg.d_model), 0.02),
+        "final_norm": jnp.zeros((cfg.d_model,), common.PARAM_DTYPE),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(ks[1], cfg.d_model, cfg.vocab)
+
+    layer_keys = jax.random.split(ks[2], cfg.n_layers)
+    if cfg.family == "ssm":
+        p["layers"] = jax.vmap(
+            lambda k: rwkv_lib.init_rwkv_block(k, cfg))(layer_keys)
+    elif cfg.family == "hybrid":
+        p["layers"] = jax.vmap(
+            lambda k: ssm_lib.init_mamba2(k, cfg))(layer_keys)
+        p["shared_attn"] = init_attn_layer(ks[3], cfg)
+    elif cfg.family == "audio":
+        p["layers"] = jax.vmap(
+            lambda k: _init_decdec_layer(k, cfg))(layer_keys)
+        enc_keys = jax.random.split(ks[4], cfg.enc_layers)
+        p["enc_layers"] = jax.vmap(
+            lambda k: init_attn_layer(k, cfg))(enc_keys)
+        p["enc_norm"] = jnp.zeros((cfg.d_model,), common.PARAM_DTYPE)
+        p["enc_pos"] = common.uniform_init(ks[5], (cfg.enc_seq, cfg.d_model),
+                                           0.02)
+    else:
+        p["layers"] = jax.vmap(lambda k: init_attn_layer(k, cfg))(layer_keys)
+
+    if cfg.mtp_heads:
+        p["mtp"] = {
+            "norm_h": jnp.zeros((cfg.d_model,), common.PARAM_DTYPE),
+            "norm_e": jnp.zeros((cfg.d_model,), common.PARAM_DTYPE),
+            "proj": dense_init(ks[6], 2 * cfg.d_model, cfg.d_model),
+            "layer": init_attn_layer(ks[7], cfg),
+        }
+    return p
+
+
+def _init_decdec_layer(key, cfg):
+    """Whisper decoder layer: self-attn + cross-attn + FFN."""
+    ks = split(key, 3)
+    p = init_attn_layer(ks[0], cfg)
+    p["xnorm"] = jnp.zeros((cfg.d_model,), common.PARAM_DTYPE)
+    p["xattn"] = attn_lib.init_attn(ks[1], cfg)
+    return p
+
+
+# ============================================================ layer bodies
+def _window_for_layer(cfg, idx):
+    """Dynamic window size: local layers get cfg.window, global layers get
+    BIG_WINDOW (gemma2 alternation) — dynamic so it lives inside scan."""
+    if cfg.window is None:
+        return None
+    if not cfg.local_global_every:
+        return jnp.asarray(cfg.window, jnp.int32)
+    is_global = ((idx + 1) % cfg.local_global_every) == 0
+    return jnp.where(is_global, BIG_WINDOW, cfg.window).astype(jnp.int32)
+
+
+def attn_layer_fwd(lp, cfg, x, positions, idx, aux):
+    """Full-sequence (train/prefill) attention layer."""
+    h = rms_norm(x, lp["norm1"], cfg.norm_eps)
+    if cfg.mla is not None:
+        a, c_kv, k_rope = attn_lib.mla_attention(lp["attn"], cfg, h,
+                                                 positions, cfg.attn_chunk)
+        cache_kv = (c_kv, k_rope)
+    else:
+        q, k, v = attn_lib.qkv(lp["attn"], cfg, h, positions)
+        o = attn_lib.chunked_attention(
+            q, k, v, causal=True, window=_window_for_layer(cfg, idx),
+            cap=cfg.attn_softcap, chunk=cfg.attn_chunk)
+        b, s = x.shape[:2]
+        o = o.reshape(b, s, cfg.n_heads * cfg.d_head)
+        a = jnp.einsum("bsk,kd->bsd", o, lp["attn"]["wo"].astype(x.dtype))
+        cache_kv = (k, v)
+    if cfg.post_norm:
+        a = rms_norm(a, lp["post1"], cfg.norm_eps)
+    x = x + a
+
+    h = rms_norm(x, lp["norm2"], cfg.norm_eps)
+    if cfg.moe is not None:
+        f, moe_aux = moe_lib.moe_ffn(lp["moe"], cfg, h)
+        aux = aux + moe_aux
+    else:
+        f = ffn_lib.ffn(lp["ffn"], h)
+    if cfg.post_norm:
+        f = rms_norm(f, lp["post2"], cfg.norm_eps)
+    return x + f, aux, cache_kv
+
+
+def attn_layer_decode(lp, cfg, x, pos, cache, idx):
+    """One-token decode with cache update. cache: family-specific tuple."""
+    h = rms_norm(x, lp["norm1"], cfg.norm_eps)
+    if cfg.mla is not None:
+        ckv, krope = cache
+        a, ckv, krope = attn_lib.mla_decode(lp["attn"], cfg, h, pos, ckv,
+                                            krope, pos + 1)
+        cache = (ckv, krope)
+    else:
+        k_cache, v_cache = cache
+        b = x.shape[0]
+        positions = jnp.full((b, 1), pos, jnp.int32)
+        if cfg.rope_style == "mrope":
+            positions = jnp.broadcast_to(positions, (3, b, 1))
+        q, k, v = attn_lib.qkv(lp["attn"], cfg, h, positions)
+        k_cache = jax.lax.dynamic_update_slice_in_dim(
+            k_cache, k.astype(k_cache.dtype), pos, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            v_cache, v.astype(v_cache.dtype), pos, axis=1)
+        w = _window_for_layer(cfg, idx)
+        o = attn_lib.decode_attention(
+            q, k_cache, v_cache, pos + 1,
+            window=None if w is None else w, cap=cfg.attn_softcap)
+        o = o.reshape(b, 1, cfg.n_heads * cfg.d_head)
+        a = jnp.einsum("bsk,kd->bsd", o, lp["attn"]["wo"].astype(x.dtype))
+        cache = (k_cache, v_cache)
+    if cfg.post_norm:
+        a = rms_norm(a, lp["post1"], cfg.norm_eps)
+    x = x + a
+
+    h = rms_norm(x, lp["norm2"], cfg.norm_eps)
+    if cfg.moe is not None:
+        f, _ = moe_lib.moe_ffn(lp["moe"], cfg, h)
+    else:
+        f = ffn_lib.ffn(lp["ffn"], h)
+    if cfg.post_norm:
+        f = rms_norm(f, lp["post2"], cfg.norm_eps)
+    return x + f, cache
+
+
+# ========================================================== forward (full)
+def forward(params, cfg, batch, *, mode: str, remat: bool = True):
+    """Full-sequence pass. mode: train | prefill.
+
+    Returns (hidden [B,S,D], aux_loss, cache) — cache is the stacked
+    per-layer KV/state pytree when mode == "prefill", else None.
+    """
+    want_cache = mode == "prefill"
+    if cfg.embeds_input:
+        x = batch["embeds"].astype(common.COMPUTE_DTYPE)
+    else:
+        x = embed(batch["tokens"], params["embed"])
+    b, s = x.shape[:2]
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    if cfg.family == "ssm":
+        return _forward_rwkv(params, cfg, x, want_cache, remat)
+    if cfg.family == "hybrid":
+        return _forward_hybrid(params, cfg, x, positions, want_cache, remat)
+    if cfg.family == "audio":
+        return _forward_whisper(params, cfg, x, batch, positions, want_cache,
+                                remat)
+
+    def body(carry, inp):
+        xc, aux = carry
+        lp, idx = inp
+        xn, aux, kv = attn_layer_fwd(lp, cfg, xc, positions, idx, aux)
+        return (xn, aux), kv if want_cache else None
+
+    if remat:
+        body = jax.checkpoint(body)
+    (x, aux), caches = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)),
+        (params["layers"], jnp.arange(cfg.n_layers)))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, aux, caches
+
+
+def _forward_rwkv(params, cfg, x, want_cache, remat):
+    b = x.shape[0]
+
+    def body(xc, lp):
+        carry0 = rwkv_lib.init_rwkv_carry(cfg, b)
+        xn, carry = rwkv_lib.rwkv_block(lp, cfg, xc, carry0)
+        return xn, carry if want_cache else None
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, caches = jax.lax.scan(body, x, params["layers"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, jnp.zeros((), jnp.float32), caches
+
+
+def _forward_hybrid(params, cfg, x, positions, want_cache, remat):
+    """Zamba2: groups of ``hybrid_attn_every`` mamba blocks; after each
+    group the ONE shared attention block runs (fresh KV per application)."""
+    every = cfg.hybrid_attn_every or cfg.n_layers
+    n_groups = cfg.n_layers // every
+    aux = jnp.zeros((), jnp.float32)
+
+    def mamba_body(xc, lp):
+        y, (h, conv) = ssm_lib.mamba2_forward(lp, cfg, xc)
+        return xc + y, (h, conv) if want_cache else None
+
+    if remat:
+        mamba_body = jax.checkpoint(mamba_body)
+
+    grouped = jax.tree.map(
+        lambda a: a.reshape(n_groups, every, *a.shape[1:]), params["layers"])
+
+    ssm_caches, attn_caches = [], []
+    for gi in range(n_groups):
+        gparams = jax.tree.map(lambda a: a[gi], grouped)
+        x, gcache = jax.lax.scan(mamba_body, x, gparams)
+        x, aux, kv = attn_layer_fwd(params["shared_attn"], cfg, x, positions,
+                                    jnp.asarray(gi), aux)
+        if want_cache:
+            ssm_caches.append(gcache)
+            attn_caches.append(kv)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    cache = None
+    if want_cache:
+        ssm_stack = jax.tree.map(lambda *xs: jnp.concatenate(xs, 0),
+                                 *ssm_caches)
+        attn_stack = jax.tree.map(lambda *xs: jnp.stack(xs), *attn_caches)
+        cache = (ssm_stack, attn_stack)
+    return x, aux, cache
+
+
+def _forward_whisper(params, cfg, x, batch, positions, want_cache, remat):
+    """x here is the DECODER token embedding; encoder consumes the stub
+    frame embeddings batch["enc_embeds"]."""
+    enc = batch["enc_embeds"].astype(common.COMPUTE_DTYPE)
+    enc = enc + params["enc_pos"].astype(enc.dtype)[None, :enc.shape[1]]
+    eb, es = enc.shape[:2]
+    enc_pos = jnp.broadcast_to(jnp.arange(es, dtype=jnp.int32), (eb, es))
+
+    def enc_body(xc, lp):
+        h = rms_norm(xc, lp["norm1"], cfg.norm_eps)
+        q, k, v = attn_lib.qkv(lp["attn"], cfg, h, enc_pos)
+        o = attn_lib.chunked_attention(q, k, v, causal=False,
+                                       chunk=cfg.attn_chunk)
+        o = o.reshape(eb, es, cfg.n_heads * cfg.d_head)
+        xc = xc + jnp.einsum("bsk,kd->bsd", o,
+                             lp["attn"]["wo"].astype(xc.dtype))
+        h = rms_norm(xc, lp["norm2"], cfg.norm_eps)
+        return xc + ffn_lib.ffn(lp["ffn"], h), None
+
+    if remat:
+        enc_body = jax.checkpoint(enc_body)
+    enc, _ = jax.lax.scan(enc_body, enc, params["enc_layers"])
+    enc = rms_norm(enc, params["enc_norm"], cfg.norm_eps)
+
+    def dec_body(carry, lp):
+        xc, aux = carry
+        xn, aux, kv = attn_layer_fwd(lp, cfg, xc, positions, jnp.zeros((), jnp.int32), aux)
+        # cross-attention
+        h = rms_norm(xn, lp["xnorm"], cfg.norm_eps)
+        q, _, _ = attn_lib.qkv(lp["xattn"], cfg, h, positions)
+        _, ek, ev = attn_lib.qkv(lp["xattn"], cfg, enc, enc_pos)
+        o = attn_lib.chunked_attention(q, ek, ev, causal=False,
+                                       chunk=cfg.attn_chunk)
+        o = o.reshape(xn.shape[0], xn.shape[1], cfg.n_heads * cfg.d_head)
+        xn = xn + jnp.einsum("bsk,kd->bsd", o,
+                             lp["xattn"]["wo"].astype(xn.dtype))
+        return (xn, aux), (kv, (ek, ev)) if want_cache else None
+
+    if remat:
+        dec_body = jax.checkpoint(dec_body)
+    (x, aux), caches = jax.lax.scan(
+        dec_body, (x, jnp.zeros((), jnp.float32)), params["layers"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, aux, caches
+
+
+# ================================================================= losses
+def logits_from_hidden(params, cfg, x):
+    table = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    return unembed(x, table, cfg.tie_embeddings)
+
+
+def train_loss(params, cfg, batch, *, remat: bool = True):
+    x, aux, _ = forward(params, cfg, batch, mode="train", remat=remat)
+    # NOTE: chunked CE (common.cross_entropy_chunked) was hypothesized to cut
+    # the [T, V] f32 logits round-trip, but with the vocab axis TP-sharded
+    # the logits are already /16 per chip — measured no change on the 671B
+    # cell (EXPERIMENTS §Perf iter 7, refuted) — so the plain head stays.
+    logits = logits_from_hidden(params, cfg, x)
+    loss = cross_entropy(logits, batch["labels"], cfg.final_softcap)
+
+    if cfg.mtp_heads and "labels" in batch:
+        # DeepSeek-V3 MTP: predict t+2 from (h_t, emb(token_{t+1}))
+        mtp = params["mtp"]
+        emb_next = embed(jnp.roll(batch["tokens"], -1, axis=1),
+                         params["embed"])
+        hcat = jnp.concatenate(
+            [rms_norm(x, mtp["norm_h"], cfg.norm_eps),
+             rms_norm(emb_next, mtp["norm_e"], cfg.norm_eps)], axis=-1)
+        h2 = jnp.einsum("bsk,kd->bsd", hcat, mtp["proj"].astype(x.dtype))
+        b, s = h2.shape[:2]
+        pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        h2, _, _ = attn_layer_fwd(mtp["layer"], cfg, h2, pos,
+                                  jnp.zeros((), jnp.int32),
+                                  jnp.zeros((), jnp.float32))
+        mtp_logits = logits_from_hidden(params, cfg, h2)
+        mtp_labels = jnp.roll(batch["labels"], -1, axis=1)
+        loss = loss + 0.3 * cross_entropy(mtp_logits, mtp_labels,
+                                          cfg.final_softcap)
+    return loss + aux, {"aux": aux}

@@ -1,0 +1,8 @@
+"""Optimizer substrate: AdamW, schedules, clipping, accumulation."""
+
+from repro.optim.adamw import (AdamWConfig, adamw_update, init_opt_state,
+                               global_norm, clip_by_global_norm)
+from repro.optim.schedule import cosine_schedule
+
+__all__ = ["AdamWConfig", "adamw_update", "init_opt_state", "global_norm",
+           "clip_by_global_norm", "cosine_schedule"]

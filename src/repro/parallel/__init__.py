@@ -1,0 +1,2 @@
+"""Distribution substrate: sharding rules (DP/TP/EP/SP + ZeRO/FSDP),
+gradient compression, pipeline parallelism."""

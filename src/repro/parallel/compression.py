@@ -1,0 +1,87 @@
+"""Gradient compression for cross-pod all-reduce (DESIGN §6 tricks).
+
+Two standard schemes, both as pure functional transforms that wrap the
+gradient tree before the optimizer:
+
+  * top-k sparsification with ERROR FEEDBACK (Stich et al.): each step sends
+    only the k largest-|g| entries per tensor; the residual is carried and
+    added back next step, so the compression error is compensated rather
+    than lost. Compression ratio k/n, typically 1–10%.
+  * int8 quantization (per-tensor scale): 4× volume reduction for f32
+    gradients with stochastic-rounding-free symmetric quantization.
+
+On a real multi-pod fabric these run *before* the cross-pod reduction (the
+``pod`` axis all-reduce is the slow hop); compiled-HLO wire bytes with and
+without compression are compared in EXPERIMENTS §Perf.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ------------------------------------------------------------ top-k + EF
+def init_error_feedback(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def topk_compress(grads, residual, *, fraction: float = 0.01):
+    """Returns (sparse_grads, new_residual). ``sparse_grads`` keeps only the
+    top-``fraction`` entries of (grad + residual) per tensor; the rest moves
+    into the residual (error feedback)."""
+
+    def one(g, r):
+        g = g.astype(jnp.float32) + r
+        flat = g.reshape(-1)
+        k = max(1, int(flat.size * fraction))
+        thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+        mask = jnp.abs(g) >= thresh
+        sent = jnp.where(mask, g, 0.0)
+        return sent, g - sent
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_r = jax.tree.leaves(residual)
+    out = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    return (jax.tree.unflatten(tdef, [o[0] for o in out]),
+            jax.tree.unflatten(tdef, [o[1] for o in out]))
+
+
+# ------------------------------------------------------------------ int8
+def int8_compress(grads):
+    """(quantized int8 tree, scales tree) — symmetric per-tensor."""
+
+    def q(g):
+        g = g.astype(jnp.float32)
+        scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+        return jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8), scale
+
+    flat, tdef = jax.tree.flatten(grads)
+    qs = [q(g) for g in flat]
+    return (jax.tree.unflatten(tdef, [x[0] for x in qs]),
+            jax.tree.unflatten(tdef, [x[1] for x in qs]))
+
+
+def int8_decompress(qgrads, scales):
+    return jax.tree.map(
+        lambda q, s: q.astype(jnp.float32) * s, qgrads, scales)
+
+
+def compressed_psum(grads, axis_name: str, *, scheme: str = "none",
+                    residual=None, fraction: float = 0.01):
+    """All-reduce ``grads`` over ``axis_name`` with optional compression.
+    Must run inside shard_map/pmap. Returns (reduced, new_residual)."""
+    if scheme == "none":
+        return jax.tree.map(lambda g: jax.lax.psum(g, axis_name), grads), residual
+    if scheme == "int8":
+        q, s = int8_compress(grads)
+        q = jax.tree.map(lambda x: jax.lax.psum(x.astype(jnp.int32),
+                                                axis_name), q)
+        # scales reduced with max → conservative dequant
+        s = jax.tree.map(lambda x: jax.lax.pmax(x, axis_name), s)
+        return jax.tree.map(lambda qq, ss: qq.astype(jnp.float32) * ss, q, s), \
+            residual
+    if scheme == "topk":
+        sent, residual = topk_compress(grads, residual, fraction=fraction)
+        return jax.tree.map(lambda g: jax.lax.psum(g, axis_name), sent), residual
+    raise ValueError(f"unknown compression scheme {scheme}")

@@ -1,0 +1,55 @@
+"""Activation-sharding hints (the §Perf levers).
+
+Model code is mesh-agnostic; the launcher enables hints with the mesh's
+axis names before lowering, and performance-critical spots call
+``constrain(x, "dp", "tp", None, ...)`` to pin activation layouts where
+GSPMD's default propagation picks pathological reshards (EXPERIMENTS §Perf
+documents each site with before/after numbers). With hints disabled (unit
+tests, single device) every call is a no-op.
+
+Axis tokens: "dp" → the data axes (("pod","data") on the multi-pod mesh),
+"tp" → the model axis, None → unsharded.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_STATE = {"enabled": False, "dp": ("data",), "tp": "model",
+          "mesh": None}
+
+
+def enable(dp=("data",), tp="model", mesh=None):
+    _STATE.update(enabled=True, dp=tuple(dp), tp=tp, mesh=mesh)
+
+
+def disable():
+    _STATE["enabled"] = False
+
+
+def enabled() -> bool:
+    return _STATE["enabled"]
+
+
+def mesh():
+    return _STATE["mesh"]
+
+
+def axes(token):
+    if token == "dp":
+        dp = _STATE["dp"]
+        return dp if len(dp) > 1 else dp[0]
+    if token == "tp":
+        return _STATE["tp"]
+    return token
+
+
+def spec(*tokens) -> P:
+    return P(*[axes(t) for t in tokens])
+
+
+def constrain(x, *tokens):
+    if not _STATE["enabled"]:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec(*tokens))

@@ -1,0 +1,160 @@
+"""Partition rules: param/batch/cache PartitionSpecs for every arch.
+
+Layout (DESIGN §6):
+  * TP over ``model``: attention head projections, FFN inner dim, MoE expert
+    axis (EP), vocab axis of the embedding/lm-head.
+  * DP over ``data`` (× ``pod`` in the multi-pod mesh): the batch axis.
+  * FSDP/ZeRO-3 over the DP axes: every ≥2-D weight additionally shards its
+    largest not-yet-sharded axis (param + grad + optimizer state) — this is
+    what lets the 671B config fit per-chip HBM.
+  * SP for serving caches: the sequence axis shards over ``model`` (and over
+    the DP axes too when global_batch == 1, the long_500k cell), so decode
+    attention merges softmax partials with small all-reduces instead of
+    gathering a multi-GB cache.
+
+Rules are name-based on the param-tree path; divisibility is checked and
+falls back to replication (e.g. whisper's vocab 51865 is not 16-divisible).
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# weights whose LAST axis is the "parallel" (output/TP) axis
+_SHARD_LAST = {"wq", "wk", "wv", "wq_a", "wq_b", "wkv_a", "wkv_b",
+               "w_gate", "w_up", "ck", "lora_a", "wa", "wr", "wg",
+               "in_proj", "conv_w", "proj", "bq", "bk", "bv"}
+# weights whose FIRST (non-stack) axis is the parallel (input) axis
+_SHARD_FIRST = {"wo", "w_down", "cv", "out_proj", "wb", "lora_b"}
+_REPLICATED = {"router", "mu_rkvgw", "u"}
+_STACKED = {"layers", "enc_layers"}
+
+
+def _axis_size(mesh_shape: dict, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh_shape[axes]
+    n = 1
+    for a in axes:
+        n *= mesh_shape[a]
+    return n
+
+
+def param_pspec(path: Sequence[str], shape, *, mesh_shape: dict,
+                dp_axes=("data",), fsdp: bool = True) -> P:
+    names = [str(getattr(p, "key", getattr(p, "name", p))) for p in path]
+    leaf = names[-1]
+    stacked = 1 if (names and names[0] in _STACKED) else 0
+    ndim = len(shape)
+    spec: list = [None] * ndim
+
+    def fits(dim_idx, axes) -> bool:
+        return spec[dim_idx] is None and \
+            shape[dim_idx] % _axis_size(mesh_shape, axes) == 0
+
+    is_moe_expert = "moe" in names and leaf in ("w_gate", "w_up", "w_down")
+    if is_moe_expert:
+        if fits(stacked, "model"):
+            spec[stacked] = "model"                 # expert axis → EP
+    elif leaf == "embed":
+        if fits(0, "model"):
+            spec[0] = "model"                       # vocab-parallel
+    elif leaf == "lm_head":
+        if fits(ndim - 1, "model"):
+            spec[ndim - 1] = "model"
+    elif leaf in _REPLICATED or ndim - stacked <= 1 and leaf not in _SHARD_LAST:
+        pass
+    elif leaf in _SHARD_LAST:
+        if fits(ndim - 1, "model"):
+            spec[ndim - 1] = "model"
+    elif leaf in _SHARD_FIRST:
+        if fits(stacked, "model"):
+            spec[stacked] = "model"
+
+    if fsdp and ndim - stacked >= 2:
+        # ZeRO-3: shard the biggest remaining axis over the DP axes
+        cands = [i for i in range(stacked, ndim) if spec[i] is None]
+        cands.sort(key=lambda i: -shape[i])
+        for i in cands:
+            if fits(i, dp_axes):
+                spec[i] = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+                break
+    return P(*spec)
+
+
+def params_shardings(params_shape, mesh: Mesh, *, fsdp: bool = True):
+    dp_axes = tuple(a for a in mesh.axis_names if a != "model")
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def rule(path, leaf):
+        spec = param_pspec(path, leaf.shape, mesh_shape=mesh_shape,
+                           dp_axes=dp_axes, fsdp=fsdp)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(rule, params_shape)
+
+
+def batch_pspec(mesh: Mesh, global_batch: int):
+    """Batch axis over the DP axes (dropping axes that don't divide)."""
+    dp_axes = [a for a in mesh.axis_names if a != "model"]
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    use = []
+    n = 1
+    for a in dp_axes:
+        if global_batch % (n * mesh_shape[a]) == 0:
+            use.append(a)
+            n *= mesh_shape[a]
+    return tuple(use) if use else None
+
+
+def batch_shardings(batch_shape, mesh: Mesh, global_batch: int):
+    dp = batch_pspec(mesh, global_batch)
+
+    def rule(path, leaf):
+        names = [str(getattr(p, "key", p)) for p in path]
+        if names and names[-1] == "positions" and len(leaf.shape) == 3:
+            return NamedSharding(mesh, P(None, dp, None))
+        spec = [dp] + [None] * (len(leaf.shape) - 1)
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(rule, batch_shape)
+
+
+def cache_shardings(cache_shape, mesh: Mesh, global_batch: int, capacity: int):
+    """SP rules for serving caches: shard the (large) sequence axis."""
+    dp = batch_pspec(mesh, global_batch)
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    seq_axes = ("model",) if dp else \
+        tuple(a for a in mesh.axis_names if a != "model") + ("model",)
+
+    def rule(path, leaf):
+        shape = leaf.shape
+        spec = [None] * len(shape)
+        if len(shape) >= 1:
+            spec[0] = None                               # stacked L
+        if len(shape) >= 2 and dp and shape[1] == -1:
+            pass
+        # find the capacity axis (== capacity) → SP; batch axis (== B) → DP
+        for i, s in enumerate(shape):
+            if i == 0:
+                continue
+            if s == capacity and s % _axis_size(mesh_shape, seq_axes) == 0:
+                spec[i] = seq_axes if len(seq_axes) > 1 else seq_axes[0]
+                break
+        for i, s in enumerate(shape):
+            if i == 0 or spec[i] is not None:
+                continue
+            if dp and s == global_batch:
+                spec[i] = dp
+                break
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(rule, cache_shape)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

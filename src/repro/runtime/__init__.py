@@ -1,0 +1,7 @@
+"""Runtime substrate: fault-tolerant training driver, failure injection,
+straggler mitigation, elastic rescale."""
+
+from repro.runtime.fault_tolerance import (FailureInjector, TrainDriver,
+                                           StragglerMonitor)
+
+__all__ = ["FailureInjector", "TrainDriver", "StragglerMonitor"]

@@ -1,0 +1,167 @@
+"""Data substrate tests: stream determinism/sharding, selectivity targets,
+pipeline restart, tokenizer determinism, optimizer + hlo analyzer units."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (AdaptiveFilter, AdaptiveFilterConfig, OrderingConfig,
+                        pack, paper_filters_4)
+from repro.core.predicates import eval_all
+from repro.data import tokenizer
+from repro.data.pipeline import Pipeline
+from repro.data.stream import (DriftConfig, LogStream, gen_batch, norm_ppf,
+                               threshold_for_quantile)
+
+
+def test_norm_ppf_accuracy():
+    # spot-check against known quantiles
+    assert norm_ppf(0.5) == pytest.approx(0.0, abs=1e-9)
+    assert norm_ppf(0.975) == pytest.approx(1.959964, abs=1e-5)
+    assert norm_ppf(0.0013498980316300933) == pytest.approx(-3.0, abs=1e-6)
+
+
+@pytest.mark.parametrize("target,want", [("fig1", 0.0451), ("sens", 0.1614)])
+def test_paper_selectivity_targets(target, want):
+    preds = paper_filters_4(target)
+    cols = gen_batch(0, 0, 0, 400_000)
+    res = np.asarray(eval_all(pack(preds), jnp.asarray(cols)))
+    got = res.all(axis=0).mean()
+    assert got == pytest.approx(want, abs=0.004)
+
+
+def test_stream_counter_based_determinism():
+    a = gen_batch(7, 3, 3 * 1000, 1000)
+    b = gen_batch(7, 3, 3 * 1000, 1000)
+    np.testing.assert_array_equal(a, b)
+    c = gen_batch(7, 4, 4 * 1000, 1000)
+    assert not np.array_equal(a, c)
+
+
+def test_stream_sharding_partitions_batches():
+    total = LogStream(total_rows=16 * 65536)
+    shards = [LogStream(total_rows=16 * 65536, shard_id=i, num_shards=4)
+              for i in range(4)]
+    all_offsets = sorted(rb.row_offset for s in shards for rb in s)
+    want = sorted(rb.row_offset for rb in total)
+    assert all_offsets == want
+
+
+def test_drift_changes_selectivities():
+    preds = paper_filters_4("fig1")
+    specs = pack(preds)
+    drift = DriftConfig(kind="regime", period_rows=500_000, amplitude=1.8)
+    s_a = np.asarray(eval_all(specs, jnp.asarray(
+        gen_batch(0, 0, 0, 100_000, drift)))).mean(axis=1)
+    s_b = np.asarray(eval_all(specs, jnp.asarray(
+        gen_batch(0, 9, 520_000, 100_000, drift)))).mean(axis=1)  # regime 1
+    assert np.max(np.abs(s_a - s_b)) > 0.15   # regimes genuinely differ
+
+
+def test_tokenizer_deterministic_and_in_range():
+    cols = gen_batch(1, 0, 0, 1000)
+    t1 = tokenizer.rows_to_tokens(cols, 5000, 4)
+    t2 = tokenizer.rows_to_tokens(cols, 5000, 4)
+    np.testing.assert_array_equal(t1, t2)
+    assert t1.shape == (4000,)
+    assert t1.min() >= 0 and t1.max() < 5000
+
+
+def test_pipeline_restart_bit_identical():
+    def mk():
+        filt = AdaptiveFilter(paper_filters_4("fig1"), AdaptiveFilterConfig(
+            ordering=OrderingConfig(calculate_rate=200_000)))
+        stream = LogStream(total_rows=2_000_000,
+                           drift=DriftConfig("sine", period_rows=400_000))
+        return Pipeline(stream, filt, batch_size=2, seq_len=64,
+                        vocab_size=1000)
+
+    p1 = mk()
+    it1 = iter(p1)
+    for _ in range(3):
+        next(it1)
+    st = p1.state()
+    a = next(it1)
+
+    p2 = mk()
+    p2.restore(st)
+    b = next(iter(p2))
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    np.testing.assert_array_equal(a["labels"], b["labels"])
+
+
+def test_adamw_decreases_simple_loss():
+    from repro.optim import AdamWConfig, adamw_update, init_opt_state
+
+    w = {"w": jnp.asarray([2.0, -3.0])}
+    cfg = AdamWConfig(weight_decay=0.0, clip_norm=10.0)
+    st = init_opt_state(w, cfg)
+    loss = lambda p: jnp.sum(p["w"] ** 2)
+    l0 = float(loss(w))
+    for _ in range(50):
+        g = jax.grad(loss)(w)
+        w, st, _ = adamw_update(w, g, st, cfg, 0.1)
+    assert float(loss(w)) < 0.05 * l0
+    assert int(st.step) == 50
+
+
+def test_adamw_bf16_state_dtype():
+    from repro.optim import AdamWConfig, adamw_update, init_opt_state
+
+    w = {"w": jnp.ones((4,), jnp.bfloat16)}
+    cfg = AdamWConfig(state_dtype="bfloat16")
+    st = init_opt_state(w, cfg)
+    assert st.m["w"].dtype == jnp.bfloat16
+    w2, st2, _ = adamw_update(w, {"w": jnp.ones((4,), jnp.float32)}, st,
+                              cfg, 1e-2)
+    assert w2["w"].dtype == jnp.bfloat16
+    assert st2.v["w"].dtype == jnp.bfloat16
+
+
+def test_hlo_analyzer_multiplies_loops():
+    """The analyzer must recover the unrolled FLOPs from a scanned loop —
+    the property cost_analysis() lacks (EXPERIMENTS §methodology)."""
+    from repro.launch import hlo_analysis
+
+    def f_scan(x, w):
+        def body(c, wi):
+            return jnp.tanh(c @ wi), None
+        return jax.lax.scan(body, x, w)[0]
+
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    w = jax.ShapeDtypeStruct((8, 128, 128), jnp.float32)
+    comp = jax.jit(f_scan).lower(x, w).compile()
+    res = hlo_analysis.analyze(comp.as_text())
+    want = 2 * 128 ** 3 * 8              # 8 iterations of a 128³ matmul
+    assert res["flops_per_chip"] == pytest.approx(want, rel=0.01)
+    assert res["unknown_trip_loops"] == 0
+    # and bytes must cover at least one read+write of the weight stack
+    assert res["hbm_bytes_per_chip"] >= 8 * 128 * 128 * 4
+
+
+def test_agreedy_handles_correlated_predicates():
+    """With two perfectly correlated cut-heavy predicates, rank order runs
+    them back-to-back (wasted); conditional greedy interleaves the
+    independent one. Verify A-greedy's order differs and its true expected
+    cost is no worse."""
+    from repro.core import agreedy
+    from repro.core.predicates import OP_GT, Predicate
+
+    r = np.random.default_rng(0)
+    n = 40_000
+    x = r.uniform(0, 1, n).astype(np.float32)
+    y = r.uniform(0, 1, n).astype(np.float32)
+    cols = jnp.asarray(np.stack([x, x, y]))   # col1 duplicates col0
+    preds = [Predicate("a", 0, OP_GT, 0.7, static_cost=1.0),
+             Predicate("a2", 1, OP_GT, 0.69, static_cost=1.0),
+             Predicate("b", 2, OP_GT, 0.65, static_cost=1.0)]
+    specs = pack(preds)
+    outcomes = eval_all(specs, cols)
+    stats = agreedy.accumulate_pairs(
+        agreedy.init_pair_stats(3), outcomes, jnp.ones((n,), bool))
+    order = np.asarray(agreedy.conditional_greedy_order(
+        stats, specs.static_cost))
+    # after picking one of the correlated pair, the OTHER must NOT be next:
+    # P(pass a2 | pass a) ≈ 0.97 → nearly useless as second filter
+    assert order[1] == 2, f"conditional order {order} kept correlated pair"

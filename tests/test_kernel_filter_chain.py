@@ -1,0 +1,140 @@
+"""Pallas kernel validation: sweep shapes/dtypes/params and assert exact
+agreement with the pure-jnp oracle (ref.py) and the lazy jnp path."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import predicates as P, pack
+from repro.core.filter_exec import run_chain, compact
+from repro.core.predicates import Predicate
+from repro.kernels.filter_chain.ops import filter_chain
+from repro.kernels.filter_chain.ref import filter_chain_ref
+
+
+def chain(n_preds):
+    base = [
+        Predicate("gt", 0, P.OP_GT, 0.2, static_cost=1.0),
+        Predicate("lt", 1, P.OP_LT, 0.7, static_cost=1.3),
+        Predicate("bet", 0, P.OP_BETWEEN, 0.1, t2=0.9, static_cost=2.0),
+        Predicate("eq", 2, P.OP_EQ, 3.0, static_cost=0.7),
+        Predicate("mix", 3, P.OP_HASHMIX, 0.45 * P.MIX_MOD, rounds=6,
+                  static_cost=6.0),
+        Predicate("gt2", 1, P.OP_GT, 0.05, static_cost=0.9),
+    ]
+    return base[:n_preds]
+
+
+def cols_for(n_rows, seed=0):
+    r = np.random.default_rng(seed)
+    return np.stack([
+        r.uniform(0, 1, n_rows),
+        r.uniform(0, 1, n_rows),
+        r.integers(0, 8, n_rows).astype(np.float64),
+        r.uniform(0, P.MIX_MOD, n_rows),
+    ]).astype(np.float32)
+
+
+@pytest.mark.parametrize("n_rows", [64, 1000, 2048, 4096, 5000, 10_000])
+@pytest.mark.parametrize("n_preds", [1, 3, 6])
+def test_kernel_matches_oracle_shapes(n_rows, n_preds):
+    specs = pack(chain(n_preds))
+    cols = jnp.asarray(cols_for(n_rows))
+    perm = jnp.asarray(np.random.default_rng(n_preds).permutation(n_preds),
+                       jnp.int32)
+    got = filter_chain(cols, specs, perm, collect_rate=37, sample_phase=5)
+    ref = filter_chain_ref(cols, specs, perm, collect_rate=37, sample_phase=5)
+    lazy = run_chain(cols, specs, perm, collect_rate=37, sample_phase=5)
+    for name in got._fields:
+        # boolean/count fields exact; f32 accumulators up to summation order
+        kw = {} if name in ("mask", "cut_counts", "n_monitored") \
+            else {"rtol": 1e-6}
+        cmp = np.testing.assert_array_equal if not kw \
+            else np.testing.assert_allclose
+        cmp(np.asarray(getattr(got, name)), np.asarray(getattr(ref, name)),
+            err_msg=f"kernel vs oracle mismatch in {name}", **kw)
+        cmp(np.asarray(getattr(lazy, name)), np.asarray(getattr(ref, name)),
+            err_msg=f"jnp-lazy vs oracle mismatch in {name}", **kw)
+
+
+@pytest.mark.parametrize("tile", [256, 1024, 2048])
+def test_kernel_tile_size_invariance(tile):
+    specs = pack(chain(4))
+    cols = jnp.asarray(cols_for(4096, seed=2))
+    perm = jnp.asarray([3, 1, 0, 2], jnp.int32)
+    got = filter_chain(cols, specs, perm, collect_rate=100, sample_phase=0,
+                       tile=tile)
+    ref = filter_chain_ref(cols, specs, perm, collect_rate=100,
+                           sample_phase=0)
+    np.testing.assert_array_equal(np.asarray(got.mask), np.asarray(ref.mask))
+    np.testing.assert_array_equal(np.asarray(got.cut_counts),
+                                  np.asarray(ref.cut_counts))
+    # work accounting is tile-size invariant (row-level model)
+    assert float(got.work_units) == float(ref.work_units)
+
+
+@pytest.mark.parametrize("phase", [0, 1, 999])
+def test_kernel_sample_phase_carryover(phase):
+    """The monitor stride must be continuous across batch boundaries."""
+    specs = pack(chain(3))
+    cols = jnp.asarray(cols_for(3000, seed=3))
+    got = filter_chain(cols, specs, jnp.arange(3, dtype=jnp.int32),
+                       collect_rate=1000, sample_phase=phase)
+    idx = [i for i in range(3000) if (i + phase) % 1000 == 0]
+    assert float(got.n_monitored) == len(idx)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_kernel_column_dtype(dtype):
+    specs = pack(chain(4))
+    cols = jnp.asarray(cols_for(2048), dtype)
+    got = filter_chain(cols, specs, jnp.arange(4, dtype=jnp.int32),
+                       collect_rate=64, sample_phase=0)
+    assert got.mask.dtype == jnp.bool_
+    assert got.mask.shape == (2048,)
+
+
+def test_expensive_predicate_lazy_in_kernel():
+    """Tile short-circuit: with an all-cut first predicate the later
+    (expensive) predicates must not change the outcome — and work counters
+    must show zero active rows after position 0."""
+    preds = [Predicate("cut_all", 0, P.OP_GT, 2.0, static_cost=1.0),
+             Predicate("mix", 3, P.OP_HASHMIX, 0.5 * P.MIX_MOD, rounds=24,
+                       static_cost=9.0)]
+    specs = pack(preds)
+    cols = jnp.asarray(cols_for(4096, seed=4))
+    got = filter_chain(cols, specs, jnp.arange(2, dtype=jnp.int32),
+                       collect_rate=1 << 20, sample_phase=1)
+    assert int(got.mask.sum()) == 0
+    np.testing.assert_allclose(np.asarray(got.active_before), [4096.0, 0.0])
+
+
+def test_compaction_matches_boolean_indexing():
+    cols = jnp.asarray(cols_for(2048, seed=5))
+    specs = pack(chain(4))
+    res = filter_chain(cols, specs, jnp.arange(4, dtype=jnp.int32),
+                       collect_rate=128, sample_phase=0)
+    packed, n = compact(cols, res.mask)
+    ref = np.asarray(cols)[:, np.asarray(res.mask)]
+    np.testing.assert_array_equal(np.asarray(packed)[:, :int(n)], ref)
+
+
+def test_block_monitor_mode_unbiased():
+    """DESIGN §3.4: block sampling must (a) keep the chain outcome identical,
+    (b) sample ≈ the same fraction, (c) estimate per-predicate selectivities
+    within sampling tolerance of the row-exact mode."""
+    specs = pack(chain(4))
+    cols = jnp.asarray(cols_for(200_000, seed=9))
+    perm = jnp.arange(4, dtype=jnp.int32)
+    row = filter_chain(cols, specs, perm, collect_rate=100, sample_phase=0,
+                       monitor_mode="row")
+    blk = filter_chain(cols, specs, perm, collect_rate=100, sample_phase=0,
+                       monitor_mode="block")
+    np.testing.assert_array_equal(np.asarray(row.mask), np.asarray(blk.mask))
+    frac_row = float(row.n_monitored) / 200_000
+    frac_blk = float(blk.n_monitored) / 200_000
+    assert abs(frac_blk - frac_row) < 0.5 * frac_row
+    s_row = 1 - np.asarray(row.cut_counts) / float(row.n_monitored)
+    s_blk = 1 - np.asarray(blk.cut_counts) / float(blk.n_monitored)
+    np.testing.assert_allclose(s_blk, s_row, atol=0.05)

@@ -1,0 +1,102 @@
+"""Behavioural tests of the adaptive controller: convergence to the oracle
+order, drift tracking, scope policies, executor-sim lock semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (AdaptiveFilter, AdaptiveFilterConfig, OrderingConfig,
+                        paper_filters_4, static_filter)
+from repro.core import executor_sim, predicates as P, stats as S
+from repro.core.predicates import Predicate
+from repro.data.stream import DriftConfig, LogStream, gen_batch
+
+
+def drive(filt, n_batches=10, batch_rows=65536, drift=DriftConfig(),
+          seed=0):
+    state = filt.init_state()
+    step = jax.jit(filt.step)
+    work = 0.0
+    for b in range(n_batches):
+        cols = jnp.asarray(gen_batch(seed, b, b * batch_rows, batch_rows,
+                                     drift))
+        state, mask, metrics = step(state, cols)
+        work += float(metrics.work_units)
+    return state, work
+
+
+def test_converges_to_oracle_order_stationary():
+    preds = paper_filters_4("fig1")
+    cfg = AdaptiveFilterConfig(ordering=OrderingConfig(
+        collect_rate=500, calculate_rate=120_000, momentum=0.3))
+    filt = AdaptiveFilter(preds, cfg)
+    state, _ = drive(filt, n_batches=12)
+    # oracle: measure true pass fractions, compute rank order
+    cols = jnp.asarray(gen_batch(0, 99, 0, 200_000))
+    outcomes = np.asarray(P.eval_all(filt.specs, cols))
+    s = outcomes.mean(axis=1)
+    c = np.asarray([p.static_cost for p in preds])
+    oracle = np.argsort((c / c.max()) / (1 - s), kind="stable")
+    assert int(state.epoch) >= 3
+    # near-tied ranks may swap under sampling noise — require the adaptive
+    # order's EXPECTED COST to match the oracle's (the paper's objective)
+    def expected(perm):
+        surv = np.concatenate([[1.0], np.cumprod(s[perm])[:-1]])
+        return float(np.sum(c[perm] * surv))
+    got = expected(np.asarray(state.perm))
+    assert got <= expected(oracle) * 1.03, \
+        (np.asarray(state.perm).tolist(), oracle.tolist())
+
+
+def test_adaptive_beats_static_under_drift():
+    """Regime drift flips which int predicate cuts more; the adaptive chain
+    must do less row-level work than the user (identity) static order."""
+    preds = paper_filters_4("fig1")
+    drift = DriftConfig(kind="regime", period_rows=400_000, amplitude=1.8)
+    ordering = OrderingConfig(collect_rate=500, calculate_rate=100_000,
+                              momentum=0.3)
+    filt = AdaptiveFilter(preds, AdaptiveFilterConfig(ordering=ordering))
+    _, adaptive_work = drive(filt, n_batches=16, drift=drift)
+
+    # worst static order: expensive string predicate first
+    bad = static_filter(preds, order=[3, 2, 1, 0])
+    _, bad_work = drive(bad, n_batches=16, drift=drift)
+    assert adaptive_work < 0.6 * bad_work
+
+
+def test_per_batch_scope_forgets():
+    preds = paper_filters_4("fig1")
+    cfg = AdaptiveFilterConfig(
+        scope="per_batch",
+        ordering=OrderingConfig(collect_rate=500, calculate_rate=60_000,
+                                momentum=0.3))
+    filt = AdaptiveFilter(preds, cfg)
+    state, _ = drive(filt, n_batches=4)
+    # state is reset every batch: epoch counter can never exceed 1
+    assert int(state.epoch) <= 1
+
+
+def test_executor_sim_lock_and_deferral():
+    preds = paper_filters_4("fig1")
+    parts = [gen_batch(0, b, b * 32768, 32768) for b in range(24)]
+    cfg = OrderingConfig(collect_rate=500, calculate_rate=100_000,
+                         momentum=0.3)
+    res = executor_sim.run_executor(preds, parts, cfg, n_tasks=4,
+                                    cost_mode="static")
+    assert res.rows_processed == 24 * 32768
+    assert res.epochs >= 1
+    # with 4 tasks racing, SOME epochs defer, and deferred metrics are kept
+    # (deferral count is timing-dependent; assert non-crash + sane history)
+    assert all(sorted(p) == [0, 1, 2, 3] for p in res.perm_history)
+
+
+def test_executor_sim_matches_functional_outcome():
+    """The sim and the functional path must agree on filter OUTPUT rows."""
+    preds = paper_filters_4("fig1")
+    parts = [gen_batch(0, b, b * 32768, 32768) for b in range(4)]
+    res = executor_sim.run_executor(preds, parts, OrderingConfig(),
+                                    n_tasks=1, adaptive=False)
+    outcomes = [np.asarray(P.eval_all(P.pack(preds), jnp.asarray(p)))
+                for p in parts]
+    want = sum(int(o.all(axis=0).sum()) for o in outcomes)
+    assert res.rows_passed == want

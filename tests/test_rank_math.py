@@ -1,0 +1,78 @@
+"""Unit tests for the paper's §2.1 math: selectivity, normalized cost, rank,
+momentum, ordering."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import stats as S
+
+
+def mk_stats(num_cut, cost, n):
+    return S.FilterStats(jnp.asarray(num_cut, jnp.float32),
+                         jnp.asarray(cost, jnp.float32),
+                         jnp.asarray(n, jnp.float32))
+
+
+def test_selectivity_is_pass_fraction():
+    st = mk_stats([10, 90, 0], [1, 1, 1], 100.0)
+    np.testing.assert_allclose(S.selectivities(st), [0.9, 0.1, 1.0],
+                               rtol=1e-6)
+
+
+def test_normalized_cost_in_unit_range():
+    st = mk_stats([0, 0], [300.0, 100.0], 100.0)
+    nc = np.asarray(S.normalized_costs(st))
+    assert nc.max() == pytest.approx(1.0)
+    np.testing.assert_allclose(nc, [1.0, 1/3])
+
+
+def test_rank_formula_matches_paper():
+    # rank = nc / (1 - s); cheap+selective (cuts most) ranks first
+    st = mk_stats([80, 20], [100.0, 100.0], 100.0)
+    r = np.asarray(S.ranks(st))
+    assert r[0] < r[1]
+    np.testing.assert_allclose(r, [1.0 / 0.8, 1.0 / 0.2])
+
+
+def test_rank_allpass_predicate_is_finite_and_last():
+    st = mk_stats([0, 50], [100.0, 100.0], 100.0)
+    r = np.asarray(S.ranks(st))
+    assert np.isfinite(r).all()
+    assert r[0] > r[1]          # cuts nothing → run last
+
+
+def test_momentum_first_epoch_ignores_history():
+    adj = S.momentum_update(jnp.asarray([5.0, 5.0]), jnp.asarray([1.0, 2.0]),
+                            0.3, first_epoch=jnp.asarray(True))
+    np.testing.assert_allclose(adj, [1.0, 2.0])
+
+
+def test_momentum_recurrence():
+    # adj(t) = (1-m) rank + m adj(t-1)
+    adj = S.momentum_update(jnp.asarray([2.0]), jnp.asarray([1.0]), 0.3,
+                            first_epoch=jnp.asarray(False))
+    np.testing.assert_allclose(adj, [(1 - 0.3) * 1.0 + 0.3 * 2.0])
+
+
+def test_order_from_ranks_stable_ties():
+    perm = np.asarray(S.order_from_ranks(jnp.asarray([1.0, 0.5, 1.0, 0.1])))
+    assert perm.tolist() == [3, 1, 0, 2]   # ties broken by user order
+
+
+def test_merge_stats_associative():
+    a = mk_stats([1, 2], [3, 4], 5.0)
+    b = mk_stats([10, 20], [30, 40], 50.0)
+    m = S.merge_stats(a, b)
+    np.testing.assert_allclose(m.num_cut, [11, 22])
+    np.testing.assert_allclose(m.n_monitored, 55.0)
+
+
+def test_expected_chain_cost_formula():
+    costs = jnp.asarray([1.0, 2.0])
+    pas = jnp.asarray([0.5, 0.5])
+    # order (0,1): 1 + 0.5*2 = 2 ; order (1,0): 2 + 0.5*1 = 2.5
+    c01 = float(S.expected_chain_cost(costs, pas, jnp.asarray([0, 1])))
+    c10 = float(S.expected_chain_cost(costs, pas, jnp.asarray([1, 0])))
+    assert c01 == pytest.approx(2.0)
+    assert c10 == pytest.approx(2.5)
