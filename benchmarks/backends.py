@@ -1,4 +1,5 @@
-"""Backend comparison: numpy row-exact vs jnp masked vs Pallas fused kernel.
+"""Backend comparison driven through the FilterEngine registry: every
+registered engine runs the same paper chain through the same ABI.
 
 CPU wall times for the jitted paths; the Pallas number is interpret-mode
 (correctness harness, not perf — the kernel's TPU perf story is the bytes
@@ -12,43 +13,33 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (AdaptiveFilter, AdaptiveFilterConfig, OrderingConfig,
-                        pack, paper_filters_4)
-from repro.core import filter_exec, np_exec
-from repro.data.stream import gen_batch
+from repro.core import (MonitorSpec, available_engines, get_engine, pack,
+                        paper_filters_4)
 
 
 def main(rows: int = 262_144) -> None:
     preds = paper_filters_4("fig1")
     specs = pack(preds)
+    from repro.data.stream import gen_batch
     cols_np = gen_batch(0, 0, 0, rows)
     cols = jnp.asarray(cols_np)
     perm = jnp.arange(4, dtype=jnp.int32)
+    mon = MonitorSpec(collect_rate=1000, sample_phase=0)
 
-    # numpy row-exact (compacted short-circuit)
-    t0 = time.perf_counter()
-    np_exec.run_chain_np(cols_np, preds, np.arange(4))
-    t_np = time.perf_counter() - t0
-    print(f"backends/numpy_compacted,{t_np*1e6/rows:.4f},row-exact")
-
-    # jnp masked (jitted, vectorized)
-    f = jax.jit(lambda c: filter_exec.run_chain(
-        c, specs, perm, collect_rate=1000, sample_phase=0))
-    f(cols).mask.block_until_ready()
-    t0 = time.perf_counter()
-    f(cols).mask.block_until_ready()
-    t_jnp = time.perf_counter() - t0
-    print(f"backends/jnp_masked,{t_jnp*1e6/rows:.4f},vectorized")
-
-    # pallas fused (interpret mode on CPU)
-    from repro.kernels.filter_chain.ops import filter_chain
-    g = jax.jit(lambda c: filter_chain(
-        c, specs, perm, collect_rate=1000, sample_phase=0))
-    g(cols).mask.block_until_ready()
-    t0 = time.perf_counter()
-    g(cols).mask.block_until_ready()
-    t_pl = time.perf_counter() - t0
-    print(f"backends/pallas_interpret,{t_pl*1e6/rows:.4f},correctness-mode")
+    for name in available_engines():
+        eng = get_engine(name)
+        if eng.traceable:
+            f = jax.jit(lambda c, e=eng: e.run_chain(c, specs, perm, mon))
+            f(cols).mask.block_until_ready()          # compile
+            t0 = time.perf_counter()
+            f(cols).mask.block_until_ready()
+            note = "vectorized" if name == "jnp" else "correctness-mode"
+        else:
+            t0 = time.perf_counter()
+            eng.run_chain(cols_np, specs, np.asarray(perm), mon)
+            note = "row-exact"
+        dt = time.perf_counter() - t0
+        print(f"backends/{name},{dt*1e6/rows:.4f},{note}")
 
     # modeled TPU HBM traffic: unfused P passes vs fused single pass
     c_bytes = 3 * 4  # f32 columns per row

@@ -1,0 +1,65 @@
+"""CNF (AND-of-OR) scenario: group-shape sweep over the paper chain.
+
+For each group shape (flat conjunction, one OR pair, one wide OR group):
+
+  * cross-check the three engines' masks on one batch (conformance guard —
+    a benchmark number for a wrong mask is worthless);
+  * run the row-exact numpy workload adaptively and against the worst
+    static order, reporting µs/row and the row-level work-unit saving the
+    two-level (group + member) reordering buys.
+
+Row counts scale with REPRO_BENCH_ROWS like every other scenario.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import BENCH_ROWS, emit, run_workload
+from repro.configs.paper_filters import CNF_SHAPES, filter_chain
+from repro.core import MonitorSpec, OrderingConfig, get_engine, pack
+from repro.data.stream import gen_batch
+
+
+def _conformance(preds) -> int:
+    """Assert jnp ≡ pallas-interpret ≡ numpy masks; returns n_pass."""
+    specs = pack(preds)
+    cols_np = gen_batch(0, 0, 0, 65_536)
+    cols = jnp.asarray(cols_np)
+    perm = np.arange(len(preds), dtype=np.int32)
+    mon = MonitorSpec(collect_rate=997, sample_phase=3)
+    masks = {}
+    for name in ("jnp", "pallas", "numpy"):
+        eng = get_engine(name)
+        data = cols_np if not eng.traceable else cols
+        masks[name] = np.asarray(
+            eng.run_chain(data, specs, jnp.asarray(perm), mon).mask)
+    assert np.array_equal(masks["jnp"], masks["pallas"])
+    assert np.array_equal(masks["jnp"], masks["numpy"])
+    return int(masks["jnp"].sum())
+
+
+def main() -> None:
+    rows = max(BENCH_ROWS // 2, 131_072)
+    ordering = OrderingConfig(collect_rate=500, calculate_rate=100_000,
+                              momentum=0.3)
+    for shape in CNF_SHAPES:
+        preds = filter_chain(shape)
+        n_pass = _conformance(preds)
+        adaptive = run_workload(preds, adaptive=True, ordering=ordering,
+                                rows=rows, cost_mode="static")
+        # worst static order: reversed user order puts the expensive
+        # hashmix member first in its OR group and its group first overall
+        worst = run_workload(preds, adaptive=False,
+                             order=list(range(len(preds)))[::-1], rows=rows)
+        saving = 1.0 - adaptive["work_units"] / max(worst["work_units"], 1e-9)
+        emit(f"cnf/{shape}_adaptive", adaptive,
+             derived=f"engines_agree_npass={n_pass} "
+                     f"work_saving_vs_worst_static={saving:.2%} "
+                     f"perm={adaptive['final_perm']}")
+        emit(f"cnf/{shape}_worst_static", worst)
+
+
+if __name__ == "__main__":
+    main()

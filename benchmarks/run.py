@@ -15,9 +15,14 @@ import time
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
-                    help="comma list: fig1,fig2,fig3,fig4,backends,roofline")
+                    help="comma list: fig1,fig2,fig3,fig4,backends,cnf,"
+                         "roofline")
+    ap.add_argument("--cnf", action="store_true",
+                    help="shortcut for --only cnf (AND-of-OR group sweep)")
     args = ap.parse_args()
     want = set(args.only.split(",")) if args.only else None
+    if args.cnf:
+        want = (want | {"cnf"}) if want else {"cnf"}
 
     def go(name, fn):
         if want and name not in want:
@@ -27,8 +32,9 @@ def main() -> None:
         fn()
         print(f"# {name} took {time.perf_counter()-t0:.1f}s", flush=True)
 
-    from benchmarks import (backends, fig1_permutations, fig2_collect_rate,
-                            fig3_calculate_rate, fig4_momentum, roofline)
+    from benchmarks import (backends, cnf_groups, fig1_permutations,
+                            fig2_collect_rate, fig3_calculate_rate,
+                            fig4_momentum, roofline)
 
     go("fig1", lambda: (fig1_permutations.main("none"),
                         fig1_permutations.main("regime")))
@@ -36,6 +42,7 @@ def main() -> None:
     go("fig3", fig3_calculate_rate.main)
     go("fig4", fig4_momentum.main)
     go("backends", backends.main)
+    go("cnf", cnf_groups.main)
     go("roofline", roofline.main)
 
 

@@ -1,25 +1,31 @@
 """Adaptive filter ordering — the paper's contribution, as a JAX module.
 
 Public API:
-  Predicate, pack, OP_*            — predicate algebra
+  Predicate, pack, OP_*            — predicate algebra (CNF via ``group``)
   OrderingConfig, OrderState       — Table-1 parameters + adaptive state
   AdaptiveFilter, AdaptiveFilterConfig, static_filter — the operator
   Scope                            — per_batch / per_shard / centralized
+  engine (get_engine/register)     — pluggable execution backends
 """
 
 from repro.core.adaptive_filter import (AdaptiveFilter, AdaptiveFilterConfig,
                                         StepMetrics, static_filter)
+from repro.core.engine import (ChainResult, FilterEngine, MonitorSpec,
+                               available_engines, get_engine)
 from repro.core.ordering import OrderingConfig, OrderState, init_order_state
 from repro.core.predicates import (OP_BETWEEN, OP_EQ, OP_GT, OP_HASHMIX,
                                    OP_LT, Predicate, PredicateSpecs, pack,
-                                   paper_filters_4)
+                                   paper_filters_4, paper_filters_cnf)
 from repro.core.scope import Scope
 from repro.core.stats import FilterStats
 
 __all__ = [
     "AdaptiveFilter", "AdaptiveFilterConfig", "StepMetrics", "static_filter",
+    "ChainResult", "FilterEngine", "MonitorSpec", "available_engines",
+    "get_engine",
     "OrderingConfig", "OrderState", "init_order_state",
     "OP_BETWEEN", "OP_EQ", "OP_GT", "OP_HASHMIX", "OP_LT",
     "Predicate", "PredicateSpecs", "pack", "paper_filters_4",
+    "paper_filters_cnf",
     "Scope", "FilterStats",
 ]

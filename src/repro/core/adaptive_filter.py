@@ -1,16 +1,21 @@
-"""The user-facing adaptive filter operator.
+"""The user-facing adaptive filter operator — a thin orchestrator.
 
 This is the framework's analogue of the paper's Catalyst extension: a
-pipeline stage that can replace any static conjunctive filter. Plug it into
-``repro.data.pipeline.Pipeline`` (ingestion for training) or call
-``step``/``process_stream`` directly (serving guardrails, benchmarks).
+pipeline stage that can replace any static conjunctive (or CNF) filter.
+Plug it into ``repro.data.pipeline.Pipeline`` (ingestion for training) or
+call ``step``/``process_stream`` directly (serving guardrails, benchmarks).
+
+All execution semantics live behind the ``FilterEngine`` registry
+(``core/engine/``) and all ordering math in ``core.ordering`` /
+``core.stats`` (one implementation, numpy or jnp via the ``xp`` namespace
+argument) — this module only wires them together:
 
   cfg.adaptive=False  → behaves exactly like Spark's default Filter
                         (user-statement order, no monitoring) — the paper's
                         baseline, kept so both can be benchmarked.
-  cfg.backend         → "jnp" (jit-able vectorized), "pallas" (fused TPU
-                        kernel; interpret-mode on CPU), "numpy" (row-exact
-                        host path used by benchmarks).
+  cfg.backend         → any registered engine: "jnp" (jit-able vectorized),
+                        "pallas" (fused TPU kernel; interpret-mode on CPU),
+                        "numpy" (row-exact host path used by benchmarks).
   cfg.cost_mode       → "static" (calibrated per-predicate weights; works
                         inside jit) or "measured" (host clock per predicate
                         per batch over the monitor sample — the paper's
@@ -26,9 +31,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import filter_exec, np_exec
+from repro.core import engine as engine_lib
 from repro.core import ordering as ordering_lib
 from repro.core import predicates as pred_lib
+from repro.core.engine import MonitorSpec, get_engine
 from repro.core.ordering import OrderingConfig, OrderState
 from repro.core.predicates import Predicate
 from repro.core.scope import Scope, reduce_stats, scope_from_str
@@ -47,8 +53,10 @@ class AdaptiveFilterConfig:
         scope_from_str(self.scope)
         if self.cost_mode not in ("static", "measured"):
             raise ValueError(f"bad cost_mode {self.cost_mode}")
-        if self.backend not in ("jnp", "pallas", "numpy"):
-            raise ValueError(f"bad backend {self.backend}")
+        if self.backend not in engine_lib.available_engines():
+            raise ValueError(
+                f"bad backend {self.backend}; registered engines: "
+                f"{engine_lib.available_engines()}")
         if self.cost_mode == "measured" and self.backend != "numpy":
             raise ValueError("measured cost mode needs the host (numpy) backend")
 
@@ -58,11 +66,11 @@ class StepMetrics(NamedTuple):
     n_pass: jnp.ndarray         # surviving rows
     perm: jnp.ndarray           # order used for this batch
     epoch: jnp.ndarray          # epochs completed so far
-    adj_rank: jnp.ndarray       # current smoothed ranks
+    adj_rank: jnp.ndarray       # current smoothed GROUP ranks
 
 
 class AdaptiveFilter:
-    """Adaptive conjunctive filter with epoch-based predicate reordering."""
+    """Adaptive CNF filter with epoch-based predicate/group reordering."""
 
     def __init__(self, predicates: Sequence[Predicate],
                  config: AdaptiveFilterConfig | None = None,
@@ -72,12 +80,27 @@ class AdaptiveFilter:
         self.predicates = list(predicates)
         self.config = config or AdaptiveFilterConfig()
         self.specs = pred_lib.pack(self.predicates)
+        self.groups = self.specs.groups          # static CNF structure
         self.axis_names = tuple(axis_names)
         self._scope = scope_from_str(self.config.scope)
+        self._engine = get_engine(self.config.backend)
+        # the jit-traceable engine driving ``step`` (host engines run via
+        # ``process_stream``; step falls back to the jnp reference engine)
+        self._step_engine = self._engine if self._engine.traceable \
+            else get_engine("jnp")
+        self._jit_step = None
 
     # ---------------------------------------------------------------- state
-    def init_state(self) -> OrderState:
-        return ordering_lib.init_order_state(len(self.predicates))
+    def init_state(self, xp=jnp) -> OrderState:
+        return ordering_lib.init_order_state(
+            len(self.predicates), self.specs.n_groups, xp=xp)
+
+    @property
+    def jit_step(self):
+        """``jax.jit(self.step)``, compiled once per instance and reused."""
+        if self._jit_step is None:
+            self._jit_step = jax.jit(self.step)
+        return self._jit_step
 
     # ----------------------------------------------------------- jit'd step
     def step(self, state: OrderState, columns: jnp.ndarray,
@@ -85,40 +108,37 @@ class AdaptiveFilter:
              ) -> tuple[OrderState, jnp.ndarray, StepMetrics]:
         """One micro-batch: filter + monitor + (maybe) epoch re-rank.
 
-        ``columns``: f32[C, R]. jit/shard_map-compatible for jnp/pallas
-        backends. Returns (new_state, mask bool[R], metrics).
+        ``columns``: f32[C, R]. jit/shard_map-compatible for traceable
+        engines. Returns (new_state, mask bool[R], metrics).
         """
         cfg = self.config
         perm = state.perm if cfg.adaptive else jnp.arange(
             len(self.predicates), dtype=jnp.int32)
 
-        if cfg.backend == "pallas":
-            from repro.kernels.filter_chain import ops as kernel_ops
-            res = kernel_ops.filter_chain(
-                columns, self.specs, perm,
-                collect_rate=cfg.ordering.collect_rate,
-                sample_phase=state.sample_phase)
-        else:
-            res = filter_exec.run_chain(
-                columns, self.specs, perm,
-                collect_rate=cfg.ordering.collect_rate,
-                sample_phase=state.sample_phase)
+        res = self._step_engine.run_chain(
+            columns, self.specs, perm,
+            MonitorSpec(collect_rate=cfg.ordering.collect_rate,
+                        sample_phase=state.sample_phase))
 
         costs = res.monitor_cost if measured_costs is None else measured_costs
 
         if cfg.adaptive:
             if self._scope is Scope.PER_BATCH:
                 state = self.init_state()
-            stats_in = filter_exec.ChainResult(*res)  # no-op; keeps names clear
-            cut, n_mon = stats_in.cut_counts, stats_in.n_monitored
+            cut, gcut, n_mon = (res.cut_counts, res.group_cut_counts,
+                                res.n_monitored)
             if self._scope is Scope.CENTRALIZED and self.axis_names:
                 from repro.core.stats import FilterStats
                 merged = reduce_stats(
-                    FilterStats(cut, costs, n_mon), self._scope, self.axis_names)
-                cut, costs, n_mon = merged.num_cut, merged.cost_acc, merged.n_monitored
+                    FilterStats(cut, costs, n_mon, gcut), self._scope,
+                    self.axis_names)
+                cut, costs, n_mon, gcut = (merged.num_cut, merged.cost_acc,
+                                           merged.n_monitored,
+                                           merged.group_cut)
             new_state = ordering_lib.advance(
                 state, cfg.ordering, cut, costs, n_mon,
-                n_rows=int(columns.shape[1]))
+                n_rows=int(columns.shape[1]),
+                group_cut=gcut, groups=self.groups)
         else:
             new_state = state._replace(
                 sample_phase=(state.sample_phase + columns.shape[1])
@@ -139,19 +159,17 @@ class AdaptiveFilter:
         """Drive the filter over a host-side stream of f32[C, R] batches.
 
         Yields (surviving_rows f32[C, n_pass], mask, metrics_dict) per batch.
-        Uses the numpy backend when configured (row-exact wall time,
-        measured costs); otherwise calls the jitted step.
+        Uses the configured host engine when one is selected (row-exact wall
+        time, measured costs); otherwise calls the jitted step.
         """
-        cfg = self.config
-        if cfg.backend == "numpy":
-            yield from self._process_stream_numpy(batches)
+        if not self._engine.traceable:
+            yield from self._process_stream_host(batches)
             return
 
-        jit_step = jax.jit(self.step)
         state = self.init_state()
         for batch in batches:
             cols = jnp.asarray(batch, jnp.float32)
-            state, mask, metrics = jit_step(state, cols)
+            state, mask, metrics = self.jit_step(state, cols)
             mask_np = np.asarray(mask)
             yield batch[:, mask_np], mask_np, {
                 "work_units": float(metrics.work_units),
@@ -160,79 +178,35 @@ class AdaptiveFilter:
                 "epoch": int(metrics.epoch),
             }
 
-    def _process_stream_numpy(self, batches):
+    def _process_stream_host(self, batches):
+        """Host streaming loop: SAME ordering math as the jitted step, run
+        through ``ordering.advance(..., xp=numpy)`` — no host-side mirror."""
         cfg = self.config
-        preds = self.predicates
-        n_preds = len(preds)
-        state = _HostOrderState(n_preds, cfg.ordering)
+        n_preds = len(self.predicates)
+        state = self.init_state(xp=np)
         for batch in batches:
             perm = state.perm if cfg.adaptive else np.arange(n_preds)
-            mask, work, _ = np_exec.run_chain_np(batch, preds, perm)
+            res = self._engine.run_chain(
+                batch, self.specs, perm,
+                MonitorSpec(collect_rate=cfg.ordering.collect_rate,
+                            sample_phase=int(state.sample_phase),
+                            cost_mode=cfg.cost_mode))
             if cfg.adaptive:
-                cut, n_mon, secs = np_exec.run_monitor_np(
-                    batch, preds, cfg.ordering.collect_rate, state.sample_phase)
-                if cfg.cost_mode == "measured":
-                    costs = secs
-                else:
-                    costs = np.array([p.static_cost for p in preds]) * n_mon
-                state.advance(cut, costs, n_mon, batch.shape[1])
+                state = ordering_lib.advance(
+                    state, cfg.ordering, res.cut_counts, res.monitor_cost,
+                    res.n_monitored, n_rows=batch.shape[1],
+                    group_cut=res.group_cut_counts, groups=self.groups,
+                    xp=np)
             else:
-                state.sample_phase = (state.sample_phase + batch.shape[1]) \
-                    % cfg.ordering.collect_rate
-            yield batch[:, mask], mask, {
-                "work_units": work,
-                "n_pass": int(mask.sum()),
+                state = state._replace(
+                    sample_phase=(state.sample_phase + batch.shape[1])
+                    % cfg.ordering.collect_rate)
+            yield batch[:, res.mask], res.mask, {
+                "work_units": float(res.work_units),
+                "n_pass": int(res.mask.sum()),
                 "perm": [int(i) for i in perm],
-                "epoch": state.epoch,
+                "epoch": int(state.epoch),
             }
-
-
-class _HostOrderState:
-    """Numpy mirror of ``OrderState`` (same math, host types)."""
-
-    def __init__(self, n_preds: int, cfg: OrderingConfig):
-        self.cfg = cfg
-        self.perm = np.arange(n_preds)
-        self.adj_rank = np.zeros(n_preds, np.float64)
-        self.num_cut = np.zeros(n_preds, np.float64)
-        self.cost_acc = np.zeros(n_preds, np.float64)
-        self.n_monitored = 0.0
-        self.rows_into_epoch = 0
-        self.sample_phase = 0
-        self.epoch = 0
-
-    def advance(self, cut, costs, n_mon, n_rows):
-        self.num_cut += cut
-        self.cost_acc += np.asarray(costs, np.float64)
-        self.n_monitored += n_mon
-        self.rows_into_epoch += n_rows
-        self.sample_phase = (self.sample_phase + n_rows) % self.cfg.collect_rate
-        if self.rows_into_epoch >= self.cfg.calculate_rate:
-            self._epoch_update()
-            self.rows_into_epoch %= self.cfg.calculate_rate
-
-    def _epoch_update(self):
-        if self.n_monitored <= 0:
-            return
-        n = max(self.n_monitored, 1.0)
-        s = np.clip(1.0 - self.num_cut / n, 0.0, 1.0)
-        avg = self.cost_acc / n
-        nc = avg / max(avg.max(), 1e-12)
-        rank = nc / np.maximum(1.0 - s, 1e-6)
-        m = self.cfg.momentum
-        self.adj_rank = rank if self.epoch == 0 else (1 - m) * rank + m * self.adj_rank
-        if self.cfg.snap_threshold > 0.0 and self.epoch > 0:
-            def cost_of(perm):
-                surv = np.concatenate([[1.0], np.cumprod(s[perm])[:-1]])
-                return float(np.sum(nc[perm] * surv))
-            fresh = np.argsort(rank, kind="stable")
-            if cost_of(self.perm) > self.cfg.snap_threshold * cost_of(fresh):
-                self.adj_rank = rank          # snap: drop stale momentum
-        self.perm = np.argsort(self.adj_rank, kind="stable")
-        self.num_cut[:] = 0.0
-        self.cost_acc[:] = 0.0
-        self.n_monitored = 0.0
-        self.epoch += 1
 
 
 def static_filter(predicates: Sequence[Predicate],

@@ -1,0 +1,49 @@
+"""Execution-engine registry: the pluggable seam behind ``AdaptiveFilter``.
+
+Three engines ship in-tree and register themselves on import:
+
+  jnp     — masked vectorized evaluation (jit/shard_map reference path)
+  pallas  — fused single-HBM-pass TPU tile kernel (interpret-mode on CPU)
+  numpy   — row-exact compacted host path (wall-clock-true, measured costs)
+
+Adding a backend is one module: implement ``FilterEngine.run_chain`` and
+decorate the class with ``@register("name")`` — ``AdaptiveFilter`` and the
+benchmarks discover it by name with no further wiring.
+"""
+
+from __future__ import annotations
+
+from repro.core.engine.base import ChainResult, FilterEngine, MonitorSpec
+
+_REGISTRY: dict = {}
+
+
+def register(name: str):
+    """Class decorator: instantiate and expose an engine under ``name``."""
+    def deco(cls):
+        cls.name = name
+        _REGISTRY[name] = cls()
+        return cls
+    return deco
+
+
+def get_engine(name: str) -> FilterEngine:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown filter engine {name!r}; available: "
+            f"{available_engines()}") from None
+
+
+def available_engines() -> tuple:
+    return tuple(sorted(_REGISTRY))
+
+
+# Self-registration of the in-tree engines (import for side effect).
+from repro.core.engine import jnp_engine as _jnp_engine          # noqa: E402
+from repro.core.engine import numpy_engine as _numpy_engine      # noqa: E402
+from repro.core.engine import pallas_engine as _pallas_engine    # noqa: E402
+
+__all__ = ["ChainResult", "FilterEngine", "MonitorSpec", "register",
+           "get_engine", "available_engines"]

@@ -1,0 +1,54 @@
+"""FilterEngine contract: the one ABI all execution backends implement.
+
+An engine turns (columns, packed predicate specs, permutation, monitor
+config) into a ``ChainResult``. The semantics are fixed — CNF evaluation
+(OR within a group, AND across groups, short-circuit at both levels, exact
+row-level work accounting) plus the paper's §2.1 monitor lane — and are
+pinned across engines by the conformance tests; only the execution strategy
+(masked jnp, fused Pallas tiles, compacted numpy) differs.
+
+Engines never touch ordering state: the epoch controller
+(``core.ordering``) consumes the monitor counters an engine reports. That
+seam is what makes backends pluggable — a new engine only has to produce a
+correct ``ChainResult``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Protocol, runtime_checkable
+
+
+class ChainResult(NamedTuple):
+    """Uniform output contract of every filter engine."""
+
+    mask: Any             # bool[R] — rows passing the whole CNF chain
+    work_units: Any       # f32[] — row-level cost-weighted work (Spark model)
+    active_before: Any    # f32[P] — rows pending evaluation at each position
+    cut_counts: Any       # f32[P] — monitor lane: rows failing each predicate
+    n_monitored: Any      # f32[] — monitor lane: sampled row count
+    monitor_cost: Any     # f32[P] — per-predicate monitor cost contribution
+    group_cut_counts: Any  # f32[G] — monitor lane: rows cut by each OR-group
+
+
+class MonitorSpec(NamedTuple):
+    """Monitor-lane parameters threaded to an engine for one batch."""
+
+    collect_rate: int      # static: sample 1 row in every collect_rate
+    sample_phase: Any      # i32[] global row offset mod collect_rate
+    cost_mode: str = "static"   # "static" | "measured" (host engines only)
+    mode: str = "row"           # "row" | "block" (pallas tile sampling)
+
+
+@runtime_checkable
+class FilterEngine(Protocol):
+    """The pluggable execution seam (register with ``engine.register``)."""
+
+    name: str
+    # True → run_chain is jit/shard_map traceable (device arrays in/out);
+    # False → host engine (numpy in/out, may use wall clocks / python loops).
+    traceable: bool
+
+    def run_chain(self, columns, specs, perm,
+                  monitor: MonitorSpec) -> ChainResult:
+        """Evaluate the CNF chain in ``perm`` order + run the monitor lane."""
+        ...

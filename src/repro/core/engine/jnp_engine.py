@@ -1,0 +1,21 @@
+"""``jnp`` engine: masked vectorized evaluation (the jit-able reference)."""
+
+from __future__ import annotations
+
+from repro.core import engine as engine_lib
+from repro.core import filter_exec
+from repro.core.engine.base import ChainResult, MonitorSpec
+
+
+@engine_lib.register("jnp")
+class JnpEngine:
+    """Fully vectorized masked CNF chain; exact row-level work counters."""
+
+    traceable = True
+
+    def run_chain(self, columns, specs, perm,
+                  monitor: MonitorSpec) -> ChainResult:
+        return filter_exec.run_chain(
+            columns, specs, perm,
+            collect_rate=monitor.collect_rate,
+            sample_phase=monitor.sample_phase)

@@ -1,0 +1,26 @@
+"""``pallas`` engine: fused single-HBM-pass tile kernel (TPU target).
+
+Interpret-mode on non-TPU backends, so the same call validates on CPU and
+runs compiled on TPU. See ``kernels/filter_chain`` for the kernel itself.
+"""
+
+from __future__ import annotations
+
+from repro.core import engine as engine_lib
+from repro.core.engine.base import ChainResult, MonitorSpec
+
+
+@engine_lib.register("pallas")
+class PallasEngine:
+    """Fused VMEM-tile CNF chain with tile-level short-circuit."""
+
+    traceable = True
+
+    def run_chain(self, columns, specs, perm,
+                  monitor: MonitorSpec) -> ChainResult:
+        from repro.kernels.filter_chain import ops as kernel_ops
+        return kernel_ops.filter_chain(
+            columns, specs, perm,
+            collect_rate=monitor.collect_rate,
+            sample_phase=monitor.sample_phase,
+            monitor_mode=monitor.mode)

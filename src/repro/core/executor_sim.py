@@ -28,6 +28,7 @@ from typing import Sequence
 import numpy as np
 
 from repro.core import np_exec
+from repro.core import stats as stats_lib
 from repro.core.ordering import OrderingConfig
 from repro.core.predicates import Predicate
 
@@ -47,22 +48,27 @@ class _ExecutorState:
         self.perm_history: list[list[int]] = []
 
     def try_epoch_update(self, num_cut, cost_acc, n_monitored) -> bool:
-        """Winner updates ranks; losers defer (returns False, keep metrics)."""
+        """Winner updates ranks; losers defer (returns False, keep metrics).
+
+        The rank math itself is the shared ``core.stats`` implementation run
+        on the numpy namespace — this class only reproduces the paper's
+        lock/defer concurrency semantics around it.
+        """
         if not self.lock.acquire(blocking=False):
             self.deferred_updates += 1
             return False
         try:
             if n_monitored <= 0:
                 return True  # consumed, nothing learned
-            n = max(n_monitored, 1.0)
-            s = np.clip(1.0 - num_cut / n, 0.0, 1.0)
-            avg = cost_acc / n
-            nc = avg / max(avg.max(), 1e-12)
-            rank = nc / np.maximum(1.0 - s, 1e-6)
-            m = self.cfg.momentum
-            self.adj_rank = rank if self.epoch == 0 \
-                else (1 - m) * rank + m * self.adj_rank
-            self.perm = np.argsort(self.adj_rank, kind="stable")
+            st = stats_lib.FilterStats(
+                num_cut=np.asarray(num_cut, np.float64),
+                cost_acc=np.asarray(cost_acc, np.float64),
+                n_monitored=float(n_monitored))
+            rank = stats_lib.ranks(st, xp=np)
+            self.adj_rank = stats_lib.momentum_update(
+                self.adj_rank, rank, self.cfg.momentum,
+                first_epoch=self.epoch == 0, xp=np)
+            self.perm = stats_lib.order_from_ranks(self.adj_rank, xp=np)
             self.perm_history.append([int(i) for i in self.perm])
             self.epoch += 1
             return True
@@ -114,7 +120,7 @@ def run_executor(predicates: Sequence[Predicate],
             perm = state.perm if adaptive else np.arange(n_preds)
             mask, work, _ = np_exec.run_chain_np(part, predicates, perm)
             if adaptive:
-                cut, m, secs = np_exec.run_monitor_np(
+                cut, _gcut, m, secs = np_exec.run_monitor_np(
                     part, predicates, cfg.collect_rate, sample_phase)
                 num_cut += cut
                 if cost_mode == "measured":

@@ -1,42 +1,45 @@
 """Chain execution + monitor lane (pure-jnp reference path).
 
-Three execution backends exist in the framework; this module is the jit-able
-reference one. All three share semantics and are cross-checked by tests:
+This module implements the ``jnp`` engine's math (see ``core/engine/`` for
+the registry; three engines share the ``ChainResult`` contract and are
+cross-checked by tests):
 
   * ``jnp`` (here)     — fully vectorized masked evaluation. Exact row-level
                          *work counters* (what Spark would have evaluated),
                          usable inside a jitted training pipeline.
-  * ``numpy_compacted``— host path in ``executor_sim.py`` / benchmarks:
-                         boolean-index compaction between predicates, so wall
-                         time genuinely tracks the chosen order (row-exact
-                         short-circuit, like Spark's processNext).
+  * ``numpy``          — host path in ``engine/numpy_engine.py`` /
+                         ``executor_sim.py``: boolean-index compaction
+                         between predicates, so wall time genuinely tracks
+                         the chosen order (row-exact short-circuit, like
+                         Spark's processNext).
   * ``pallas``         — ``kernels/filter_chain``: fused single-HBM-pass tile
                          kernel with tile-level early exit (the TPU target).
 
+CNF semantics (all engines): predicates sharing a group OR together; groups
+AND together. Evaluation short-circuits at both levels — a row stops
+evaluating an OR-group's members once one passes, and stops entirely once a
+group rejects it. ``perm`` must keep each group's members contiguous
+(``stats.cnf_order`` guarantees it); flat chains (all singleton groups) are
+the degenerate case and reproduce the paper's conjunction bit-exactly.
+
 Monitor lane (paper §2.1): rows with (global_row_index % collect_rate == 0)
 are sampled; *all* predicates are evaluated on them (correlation-bias-free),
-and numCut / cost accumulate only from those rows. Sampling is a
-deterministic stride — no PRNG — carried across batches by ``sample_phase``.
+and numCut / cost accumulate only from those rows — plus, for CNF, the exact
+per-group cut counts (no member passed). Sampling is a deterministic stride
+— no PRNG — carried across batches by ``sample_phase``.
 """
 
 from __future__ import annotations
-
-from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import predicates as pred_lib
+from repro.core.engine.base import ChainResult
 from repro.core.predicates import PredicateSpecs
 
-
-class ChainResult(NamedTuple):
-    mask: jnp.ndarray           # bool[R] — rows passing every predicate
-    work_units: jnp.ndarray     # f32[] — row-level cost-weighted work (Spark model)
-    active_before: jnp.ndarray  # f32[P] — rows alive before each chain position
-    cut_counts: jnp.ndarray     # f32[P] — monitor lane: rows failing each predicate
-    n_monitored: jnp.ndarray    # f32[] — monitor lane: sampled row count
-    monitor_cost: jnp.ndarray   # f32[P] — STATIC-mode cost contribution
+__all__ = ["ChainResult", "monitor_indices", "run_monitor", "run_chain",
+           "compact"]
 
 
 def monitor_indices(n_rows: int, collect_rate: int, sample_phase):
@@ -55,45 +58,73 @@ def monitor_indices(n_rows: int, collect_rate: int, sample_phase):
 
 def run_monitor(columns: jnp.ndarray, specs: PredicateSpecs,
                 collect_rate: int, sample_phase):
-    """Evaluate ALL predicates on the sampled rows only."""
+    """Evaluate ALL predicates on the sampled rows only.
+
+    Returns (cut f32[P], group_cut f32[G], n_monitored f32[],
+    monitor_cost f32[P]).
+    """
     n_rows = columns.shape[1]
     idx, valid = monitor_indices(n_rows, collect_rate, sample_phase)
     sampled = columns[:, idx]                      # f32[C, max_samples]
     results = pred_lib.eval_all(specs, sampled)    # bool[P, max_samples]
     cut = jnp.sum(jnp.logical_and(~results, valid[None, :]), axis=1)
+    # group cut: a sampled row is cut by group g iff NO member passes —
+    # exact (the monitor lane sees the full outcome matrix, so group
+    # selectivities carry no independence assumption).
+    group_fail = jnp.stack(
+        [jnp.all(~results[jnp.asarray(m)], axis=0)
+         for m in specs.group_members])            # bool[G, max_samples]
+    group_cut = jnp.sum(jnp.logical_and(group_fail, valid[None, :]), axis=1)
     n_monitored = jnp.sum(valid).astype(jnp.float32)
     # STATIC cost model: each sampled row pays every predicate's calibrated
     # per-row cost (the monitor lane evaluates all of them, as in the paper).
     monitor_cost = specs.static_cost * n_monitored
-    return cut.astype(jnp.float32), n_monitored, monitor_cost
+    return (cut.astype(jnp.float32), group_cut.astype(jnp.float32),
+            n_monitored, monitor_cost)
 
 
 def run_chain(columns: jnp.ndarray, specs: PredicateSpecs, perm: jnp.ndarray,
               collect_rate: int, sample_phase) -> ChainResult:
-    """Masked conjunctive chain in ``perm`` order + monitor lane.
+    """Masked CNF chain in ``perm`` order + monitor lane.
 
-    The boolean outcome is order-invariant (conjunction commutes); the work
+    The boolean outcome is order-invariant (AND/OR commute); the work
     counters are not — they are the paper's objective function, measured
-    exactly: predicate ``perm[k]`` is charged for every row still alive
-    before position k (what a row-at-a-time engine would evaluate).
+    exactly: predicate ``perm[k]`` is charged for every row still *pending*
+    at position k — alive through all closed groups AND not yet passed by an
+    earlier member of the current group (what a row-at-a-time engine with
+    both short-circuits would evaluate).
     """
     n_rows = columns.shape[1]
     n_preds = specs.n
+    flat = specs.is_flat                  # static → branch folds at trace
+    garr = jnp.asarray(specs.groups, jnp.int32)
 
-    mask = jnp.ones((n_rows,), bool)
+    mask = jnp.ones((n_rows,), bool)      # survivors of all CLOSED groups
+    group_or = jnp.zeros((n_rows,), bool)  # passes within the OPEN group
     work = jnp.zeros((), jnp.float32)
     active_before = []
 
     for k in range(n_preds):          # P is small & static → unrolled, lazy ops
         i = perm[k]
-        alive = jnp.sum(mask).astype(jnp.float32)
+        # is_first/closes are group-boundary flags; static True when flat,
+        # traced scalars otherwise (perm is dynamic under jit).
+        is_first = True if (flat or k == 0) else (garr[perm[k - 1]] != garr[i])
+        closes = True if (flat or k == n_preds - 1) \
+            else (garr[perm[k + 1]] != garr[i])
+        pending = mask if is_first is True \
+            else jnp.where(is_first, mask, jnp.logical_and(mask, ~group_or))
+        alive = jnp.sum(pending).astype(jnp.float32)
         active_before.append(alive)
         work = work + alive * specs.static_cost[i]
         x = jnp.take(columns, specs.column[i], axis=0)
         res = pred_lib.eval_one(specs, i, x)
-        mask = jnp.logical_and(mask, res)
+        group_or = res if is_first is True \
+            else jnp.where(is_first, res, jnp.logical_or(group_or, res))
+        new_mask = jnp.logical_and(mask, group_or)
+        mask = new_mask if closes is True else jnp.where(closes, new_mask, mask)
 
-    cut, n_mon, mon_cost = run_monitor(columns, specs, collect_rate, sample_phase)
+    cut, group_cut, n_mon, mon_cost = run_monitor(
+        columns, specs, collect_rate, sample_phase)
 
     return ChainResult(
         mask=mask,
@@ -102,6 +133,7 @@ def run_chain(columns: jnp.ndarray, specs: PredicateSpecs, perm: jnp.ndarray,
         cut_counts=cut,
         n_monitored=n_mon,
         monitor_cost=mon_cost,
+        group_cut_counts=group_cut,
     )
 
 

@@ -1,14 +1,19 @@
 """Row-exact numpy backend: compacted short-circuit evaluation.
 
-This is the host-side execution path used by the benchmarks and by
-``executor_sim.py``. It mirrors what Spark's generated ``processNext`` does —
-a row is never evaluated against predicates later in the order once it fails
-one — by *compacting* the active row set between predicates (boolean-index
-gather). Wall time therefore genuinely depends on the evaluation order,
-which is what Figures 1–4 of the paper measure.
+This is the host-side execution path used by the ``numpy`` engine, the
+benchmarks, and ``executor_sim.py``. It mirrors what Spark's generated
+``processNext`` does — a row is never evaluated against predicates later in
+the order once its fate is decided — by *compacting* the active row set
+between predicates (boolean-index gather). Wall time therefore genuinely
+depends on the evaluation order, which is what Figures 1–4 of the paper
+measure.
 
-Semantics are bit-identical to ``core.filter_exec`` / the Pallas kernel
-(cross-checked in tests); only the execution strategy differs.
+CNF semantics match the jnp / Pallas engines exactly (cross-checked in
+tests): within an OR-group a row stops evaluating members once one passes;
+a row that fails every member of a group is dropped before the next group.
+
+Semantics are bit-identical to ``core.filter_exec`` / the Pallas kernel;
+only the execution strategy differs.
 """
 
 from __future__ import annotations
@@ -37,54 +42,91 @@ def eval_pred_np(op: int, t1: float, t2: float, rounds: int,
     raise ValueError(f"unknown op {op}")
 
 
-def run_chain_np(columns: np.ndarray, preds, perm) -> tuple[np.ndarray, float, np.ndarray]:
-    """Short-circuit chain in ``perm`` order with inter-predicate compaction.
+def _groups_for(preds, groups) -> np.ndarray:
+    if groups is None:
+        return np.arange(len(preds))
+    g = np.asarray(groups, np.int64)
+    if g.shape != (len(preds),):
+        raise ValueError("groups must give one id per predicate")
+    return g
+
+
+def run_chain_np(columns: np.ndarray, preds, perm,
+                 groups=None) -> tuple[np.ndarray, float, np.ndarray]:
+    """Short-circuit CNF chain in ``perm`` order with compaction.
 
     Returns (mask bool[R], work_units, active_before f32[P]). ``preds`` is a
-    sequence of ``Predicate``. Work accounting matches the jnp/Pallas paths:
-    predicate perm[k] is charged static_cost × rows alive before it.
+    sequence of ``Predicate``; ``groups`` the dense group-id-per-predicate
+    tuple (None → singletons, the flat conjunction). Group members must be
+    contiguous in ``perm``. Work accounting matches the jnp/Pallas paths:
+    position k is charged static_cost × rows pending before it.
     """
+    g = _groups_for(preds, groups)
     n_rows = columns.shape[1]
-    alive_idx = np.arange(n_rows)
     mask = np.zeros(n_rows, dtype=bool)
     work = 0.0
     active_before = np.zeros(len(preds), np.float32)
 
-    for k, pi in enumerate(perm):
-        p = preds[int(pi)]
-        active_before[k] = alive_idx.size
-        work += alive_idx.size * p.static_cost
-        if alive_idx.size == 0:
-            continue
-        x = columns[p.column, alive_idx]
-        res = eval_pred_np(p.op, p.t1, p.t2, p.rounds, x)
-        alive_idx = alive_idx[res]          # compaction == short-circuit
+    perm = [int(i) for i in perm]
+    seq = [int(g[i]) for i in perm]
+    runs = [x for j, x in enumerate(seq) if j == 0 or seq[j - 1] != x]
+    if len(set(runs)) != len(runs):
+        raise ValueError("group members must be contiguous in perm")
+
+    alive_idx = np.arange(n_rows)        # survivors of all closed groups
+    k = 0
+    while k < len(perm):
+        gid = g[perm[k]]
+        # pending = alive rows not yet passed by this OR-group
+        pending = alive_idx
+        passed = np.zeros(0, np.int64)
+        while k < len(perm) and g[perm[k]] == gid:
+            p = preds[perm[k]]
+            active_before[k] = pending.size
+            work += pending.size * p.static_cost
+            if pending.size:
+                x = columns[p.column, pending]
+                res = eval_pred_np(p.op, p.t1, p.t2, p.rounds, x)
+                passed = np.concatenate([passed, pending[res]])
+                pending = pending[~res]      # OR short-circuit on first pass
+            k += 1
+        # group closes: rows that passed no member are cut
+        alive_idx = np.sort(passed)
 
     mask[alive_idx] = True
     return mask, float(work), active_before
 
 
 def run_monitor_np(columns: np.ndarray, preds, collect_rate: int,
-                   sample_phase: int) -> tuple[np.ndarray, int, np.ndarray]:
+                   sample_phase: int,
+                   groups=None) -> tuple[np.ndarray, np.ndarray, int,
+                                         np.ndarray]:
     """Monitor lane: all predicates on stride-sampled rows (paper §2.1).
 
-    Returns (cut_counts f64[P], n_monitored, per-predicate measured seconds).
-    The measured clock here is the numpy analogue of the paper's
-    ``System.nanoTime`` around each predicate evaluation.
+    Returns (cut_counts f64[P], group_cut f64[G], n_monitored,
+    per-predicate measured seconds). The measured clock here is the numpy
+    analogue of the paper's ``System.nanoTime`` around each predicate
+    evaluation.
     """
     import time
 
+    g = _groups_for(preds, groups)
+    n_groups = int(g.max()) + 1
     n_rows = columns.shape[1]
     first = (-sample_phase) % collect_rate
     idx = np.arange(first, n_rows, collect_rate)
     cut = np.zeros(len(preds), np.float64)
+    group_cut = np.zeros(n_groups, np.float64)
     secs = np.zeros(len(preds), np.float64)
     if idx.size == 0:
-        return cut, 0, secs
+        return cut, group_cut, 0, secs
+    group_fail = np.ones((n_groups, idx.size), bool)
     for i, p in enumerate(preds):
         x = columns[p.column, idx]
         t0 = time.perf_counter()
         res = eval_pred_np(p.op, p.t1, p.t2, p.rounds, x)
         secs[i] = time.perf_counter() - t0
         cut[i] = np.sum(~res)
-    return cut, int(idx.size), secs
+        group_fail[g[i]] &= ~res
+    group_cut[:] = group_fail.sum(axis=1)
+    return cut, group_cut, int(idx.size), secs

@@ -12,12 +12,25 @@ Counters are kept modulo the relevant rates in int32 so the state never
 overflows on unbounded streams (the paper's counters are JVM longs; we keep
 an epoch counter + in-epoch offsets instead, which is equivalent and
 checkpoint-friendly).
+
+Backend-agnostic: every function takes an array-namespace ``xp``
+(``jax.numpy`` for the jitted device path, ``numpy`` for host streaming) and
+runs the SAME code on both — this module is the single source of truth for
+the ordering math; there is no host-side mirror. The only divergence is the
+epoch-boundary conditional, which lowers to ``jax.lax.cond`` under jnp and a
+plain python branch under numpy.
+
+CNF (AND of OR-groups): ranks are computed per *group* (selectivity =
+exact P(group passes) from the monitor lane, cost = Σ member costs) and
+momentum-smoothed at group granularity; members are ordered within their
+group by miss-rate each epoch. For flat chains (all singleton groups) this
+reduces bit-exactly to the paper's per-predicate ordering.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -52,67 +65,92 @@ class OrderingConfig:
 
 
 class OrderState(NamedTuple):
-    """The adaptive filter's full mutable state (checkpointable pytree)."""
+    """The adaptive filter's full mutable state (checkpointable pytree).
 
-    perm: jnp.ndarray          # i32[P] current evaluation order
-    adj_rank: jnp.ndarray      # f32[P] momentum-smoothed ranks
-    stats: FilterStats         # accumulators for the current epoch
-    rows_into_epoch: jnp.ndarray   # i32[] rows processed since last re-rank
-    sample_phase: jnp.ndarray      # i32[] global row offset mod collect_rate
-    epoch: jnp.ndarray             # i32[] completed epochs (0 → no history yet)
+    Arrays are jnp on the device path and numpy on the host path; the shapes
+    and dtypes match element-wise (f32/i32), so checkpoints round-trip.
+    """
+
+    perm: Any          # i32[P] current evaluation order (groups contiguous)
+    adj_rank: Any      # f32[G] momentum-smoothed GROUP ranks (G == P if flat)
+    stats: FilterStats  # accumulators for the current epoch
+    rows_into_epoch: Any   # i32[] rows processed since last re-rank
+    sample_phase: Any      # i32[] global row offset mod collect_rate
+    epoch: Any             # i32[] completed epochs (0 → no history yet)
+    group_perm: Any = None  # i32[G] current group evaluation order
 
 
-def init_order_state(n_predicates: int) -> OrderState:
+def init_order_state(n_predicates: int, n_groups: int | None = None,
+                     xp=jnp) -> OrderState:
     """Initial order = the user-given statement order, as in Spark."""
+    if n_groups is None:
+        n_groups = n_predicates
     return OrderState(
-        perm=jnp.arange(n_predicates, dtype=jnp.int32),
-        adj_rank=jnp.zeros((n_predicates,), jnp.float32),
-        stats=stats_lib.init_stats(n_predicates),
-        rows_into_epoch=jnp.zeros((), jnp.int32),
-        sample_phase=jnp.zeros((), jnp.int32),
-        epoch=jnp.zeros((), jnp.int32),
+        perm=xp.arange(n_predicates, dtype=xp.int32),
+        adj_rank=xp.zeros((n_groups,), xp.float32),
+        stats=stats_lib.init_stats(n_predicates, n_groups, xp=xp),
+        rows_into_epoch=xp.zeros((), xp.int32),
+        sample_phase=xp.zeros((), xp.int32),
+        epoch=xp.zeros((), xp.int32),
+        group_perm=xp.arange(n_groups, dtype=xp.int32),
     )
 
 
-def epoch_update(state: OrderState, cfg: OrderingConfig) -> OrderState:
+def _default_groups(state: OrderState) -> tuple:
+    return tuple(range(int(state.perm.shape[0])))
+
+
+def epoch_update(state: OrderState, cfg: OrderingConfig,
+                 groups: tuple | None = None, xp=jnp) -> OrderState:
     """Re-rank at an epoch boundary; reset accumulators; keep momentum memory.
+
+    ``groups`` is the static CNF structure (dense group id per predicate);
+    None means all-singleton groups (flat conjunction).
 
     Guard: if the epoch collected no monitored rows (possible with tiny
     epochs), keep the previous order — reordering on zero evidence is the
     kind of thrash the momentum term exists to prevent.
     """
+    groups = tuple(groups) if groups is not None else _default_groups(state)
+    n_preds = int(state.perm.shape[0])
+    n_groups = int(state.adj_rank.shape[0])
     have_evidence = state.stats.n_monitored > 0.0
 
-    rank_now = stats_lib.ranks(state.stats)
+    rank_now = stats_lib.group_ranks(state.stats, groups, xp=xp)
     adj = stats_lib.momentum_update(state.adj_rank, rank_now, cfg.momentum,
-                                    first_epoch=state.epoch == 0)
+                                    first_epoch=state.epoch == 0, xp=xp)
     if cfg.snap_threshold > 0.0:
-        nc = stats_lib.normalized_costs(state.stats)
-        s = stats_lib.selectivities(state.stats)
-        cost_cur = stats_lib.expected_chain_cost(nc, s, state.perm)
-        fresh = stats_lib.order_from_ranks(rank_now)
-        cost_fresh = stats_lib.expected_chain_cost(nc, s, fresh)
+        nc = stats_lib.group_normalized_costs(state.stats, groups, xp=xp)
+        s = stats_lib.group_selectivities(state.stats, xp=xp)
+        cost_cur = stats_lib.expected_chain_cost(nc, s, state.group_perm,
+                                                 xp=xp)
+        fresh = stats_lib.order_from_ranks(rank_now, xp=xp)
+        cost_fresh = stats_lib.expected_chain_cost(nc, s, fresh, xp=xp)
         snap = cost_cur > cfg.snap_threshold * cost_fresh
-        adj = jnp.where(snap, rank_now, adj)
-    new_perm = stats_lib.order_from_ranks(adj)
+        adj = xp.where(snap, rank_now, adj)
+    mrank = stats_lib.member_ranks(state.stats, xp=xp)
+    new_perm, new_group_perm = stats_lib.cnf_order(adj, mrank, groups, xp=xp)
 
-    perm = jnp.where(have_evidence, new_perm, state.perm)
-    adj_rank = jnp.where(have_evidence, adj, state.adj_rank)
-    epoch = state.epoch + jnp.where(have_evidence, 1, 0).astype(jnp.int32)
+    perm = xp.where(have_evidence, new_perm, state.perm)
+    group_perm = xp.where(have_evidence, new_group_perm, state.group_perm)
+    adj_rank = xp.where(have_evidence, adj, state.adj_rank)
+    epoch = state.epoch + xp.where(have_evidence, 1, 0).astype(xp.int32)
 
     return OrderState(
         perm=perm,
         adj_rank=adj_rank,
-        stats=stats_lib.init_stats(int(state.perm.shape[0])),
-        rows_into_epoch=jnp.zeros((), jnp.int32),
+        stats=stats_lib.init_stats(n_preds, n_groups, xp=xp),
+        rows_into_epoch=xp.zeros((), xp.int32),
         sample_phase=state.sample_phase,
         epoch=epoch,
+        group_perm=group_perm,
     )
 
 
 def advance(state: OrderState, cfg: OrderingConfig,
-            cut_counts: jnp.ndarray, costs: jnp.ndarray,
-            n_monitored, n_rows: int) -> OrderState:
+            cut_counts, costs, n_monitored, n_rows: int,
+            group_cut=None, groups: tuple | None = None,
+            xp=jnp) -> OrderState:
     """Fold one batch's monitor results in; fire the epoch boundary if crossed.
 
     Epoch boundaries are honored at batch granularity (a batch is the unit of
@@ -121,8 +159,9 @@ def advance(state: OrderState, cfg: OrderingConfig,
     shape), so the modulo bookkeeping stays in int32 regardless of stream
     length.
     """
-    new_stats = stats_lib.accumulate(state.stats, cut_counts, costs, n_monitored)
-    rows = state.rows_into_epoch + jnp.asarray(n_rows, jnp.int32)
+    new_stats = stats_lib.accumulate(state.stats, cut_counts, costs,
+                                     n_monitored, group_cut=group_cut, xp=xp)
+    rows = state.rows_into_epoch + xp.asarray(n_rows, xp.int32)
     state = state._replace(
         stats=new_stats,
         rows_into_epoch=rows,
@@ -130,8 +169,11 @@ def advance(state: OrderState, cfg: OrderingConfig,
     )
 
     def fire(s: OrderState) -> OrderState:
-        updated = epoch_update(s, cfg)
+        updated = epoch_update(s, cfg, groups=groups, xp=xp)
         # carry the overshoot so epoch length is exact on average
         return updated._replace(rows_into_epoch=s.rows_into_epoch % cfg.calculate_rate)
 
-    return jax.lax.cond(rows >= cfg.calculate_rate, fire, lambda s: s, state)
+    if xp is jnp:
+        return jax.lax.cond(rows >= cfg.calculate_rate, fire, lambda s: s,
+                            state)
+    return fire(state) if rows >= cfg.calculate_rate else state

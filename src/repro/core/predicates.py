@@ -46,7 +46,15 @@ MIX_MOD = 1048576.0  # 2**20
 
 @dataclasses.dataclass(frozen=True)
 class Predicate:
-    """One filter condition over ``column`` of the record batch."""
+    """One filter condition over ``column`` of the record batch.
+
+    ``group`` extends the algebra from a flat conjunction to CNF: predicates
+    sharing a group id are OR'ed together; distinct groups are AND'ed.
+    ``group=None`` (default) puts the predicate in its own singleton group,
+    so a chain of ungrouped predicates is exactly the paper's conjunction.
+    Group labels are arbitrary hashables; ``pack`` normalizes them to dense
+    ids in first-appearance order.
+    """
 
     name: str
     column: int
@@ -55,6 +63,7 @@ class Predicate:
     t2: float = 0.0
     rounds: int = 0          # extra mix rounds (OP_HASHMIX only)
     static_cost: float = 1.0  # calibrated per-row work units (STATIC cost mode)
+    group: object = None     # CNF OR-group label; None → singleton group
 
     def __post_init__(self) -> None:
         if self.op not in _OP_NAMES:
@@ -65,13 +74,21 @@ class Predicate:
             raise ValueError("static_cost must be positive")
 
     def describe(self) -> str:
+        grp = "" if self.group is None else f" group={self.group}"
         return f"{self.name}: col[{self.column}] {_OP_NAMES[self.op]} " \
-               f"t1={self.t1} t2={self.t2} rounds={self.rounds} c={self.static_cost}"
+               f"t1={self.t1} t2={self.t2} rounds={self.rounds} " \
+               f"c={self.static_cost}{grp}"
 
 
 @dataclasses.dataclass(frozen=True)
 class PredicateSpecs:
-    """Structure-of-arrays packing of a predicate chain (kernel ABI)."""
+    """Structure-of-arrays packing of a predicate chain (kernel ABI).
+
+    ``group`` is the CNF structure: a *static* tuple of dense group ids, one
+    per predicate (it rides in the pytree aux data, not as an array, so jit
+    traces can unroll group-shaped control flow and kernels can specialize on
+    the grouping). ``()`` means all-singleton groups (flat conjunction).
+    """
 
     column: jnp.ndarray      # i32[P]
     op: jnp.ndarray          # i32[P]
@@ -79,23 +96,69 @@ class PredicateSpecs:
     t2: jnp.ndarray          # f32[P]
     rounds: jnp.ndarray      # i32[P]
     static_cost: jnp.ndarray  # f32[P]
+    group: tuple = ()        # static dense group id per predicate; () → flat
 
     @property
     def n(self) -> int:
         return int(self.column.shape[0])
 
+    @property
+    def groups(self) -> tuple:
+        """Dense group id per predicate (singletons when unset)."""
+        return self.group if self.group else tuple(range(self.n))
+
+    @property
+    def n_groups(self) -> int:
+        return max(self.groups) + 1
+
+    @property
+    def is_flat(self) -> bool:
+        """True when every group is a singleton (plain conjunction)."""
+        g = self.groups
+        return len(set(g)) == len(g)
+
+    @property
+    def group_members(self) -> tuple:
+        """tuple[G] of tuple[int] — predicate indices per group (static)."""
+        members: list[list[int]] = [[] for _ in range(self.n_groups)]
+        for i, g in enumerate(self.groups):
+            members[g].append(i)
+        return tuple(tuple(m) for m in members)
+
     def tree_flatten(self):
         return ((self.column, self.op, self.t1, self.t2, self.rounds,
-                 self.static_cost), None)
+                 self.static_cost), self.group)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        del aux
-        return cls(*children)
+        return cls(*children, group=aux)
 
 
 jax.tree_util.register_pytree_node(
     PredicateSpecs, PredicateSpecs.tree_flatten, PredicateSpecs.tree_unflatten)
+
+
+def normalize_groups(predicates: Sequence[Predicate]) -> tuple:
+    """Dense group ids in first-appearance order; None → fresh singleton.
+
+    Predicates sharing a group label must be ADJACENT in statement order:
+    the statement order is the initial evaluation permutation, and every
+    engine closes one OR accumulator at a time — the jit-traced engines
+    (jnp, pallas) cannot detect an interleaved layout at runtime, so it is
+    rejected here, at the one eager choke point.
+    """
+    ids: dict = {}
+    out = []
+    for i, p in enumerate(predicates):
+        key = ("__singleton__", i) if p.group is None else ("user", p.group)
+        gid = ids.setdefault(key, len(ids))
+        if out and gid < len(ids) - 1 and out[-1] != gid:
+            raise ValueError(
+                f"predicates of group {p.group!r} are not contiguous in "
+                f"statement order (predicate {i}: {p.name!r}); OR-group "
+                f"members must be adjacent")
+        out.append(gid)
+    return tuple(out)
 
 
 def pack(predicates: Sequence[Predicate]) -> PredicateSpecs:
@@ -109,6 +172,7 @@ def pack(predicates: Sequence[Predicate]) -> PredicateSpecs:
         t2=jnp.asarray([p.t2 for p in predicates], jnp.float32),
         rounds=jnp.asarray([p.rounds for p in predicates], jnp.int32),
         static_cost=jnp.asarray([p.static_cost for p in predicates], jnp.float32),
+        group=normalize_groups(predicates),
     )
 
 
@@ -203,4 +267,28 @@ def paper_filters_4(selectivity_target: str = "fig1") -> list[Predicate]:
                   t1=threshold_for_quantile("date", 1.0 - d), static_cost=1.2),
         Predicate("str_match", column=2, op=OP_HASHMIX,
                   t1=(1.0 - s) * MIX_MOD, rounds=24, static_cost=6.0),
+    ]
+
+
+def paper_filters_cnf(selectivity_target: str = "fig1") -> list[Predicate]:
+    """CNF (AND-of-OR) variant of the paper chain.
+
+    Same columns and thresholds; the date and string predicates collapse
+    into one OR-group ("recent OR matching") while the two int range
+    predicates stay singleton groups:
+
+        int_hi AND int_lo AND (date_gt OR str_match)
+
+    This is the first filter shape the flat conjunction could not express.
+    The OR-group pairs a cheap selective member with an expensive one, so
+    both levels of the ordering matter: the group's rank against the int
+    predicates, and evaluating ``date_gt`` before ``str_match`` inside the
+    group (an OR short-circuits on the first PASS, so the cheap member
+    spares most rows the hashmix).
+    """
+    int_hi, int_lo, date_gt, str_match = paper_filters_4(selectivity_target)
+    return [
+        int_hi, int_lo,
+        dataclasses.replace(date_gt, group="recent_or_match"),
+        dataclasses.replace(str_match, group="recent_or_match"),
     ]

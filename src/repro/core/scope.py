@@ -51,6 +51,8 @@ def reduce_stats(stats: FilterStats, scope: Scope,
             num_cut=jax.lax.psum(stats.num_cut, axis_names),
             cost_acc=jax.lax.psum(stats.cost_acc, axis_names),
             n_monitored=jax.lax.psum(stats.n_monitored, axis_names),
+            group_cut=None if stats.group_cut is None
+            else jax.lax.psum(stats.group_cut, axis_names),
         )
     return stats
 

@@ -12,96 +12,206 @@ Faithful to §2.1 of the paper:
 Ordering predicates by adj_rank ascending minimizes the expected per-row
 chain cost  Σ_i c_i Π_{j<i} s_j  (see tests/test_property_hypothesis.py for
 the machine-checked proof-by-enumeration).
+
+CNF extension (AND of OR-groups): the same machinery lifts to *groups* —
+
+  * ``group_cut[g]`` — monitored rows cut by group g (no member passed)
+  * group selectivity  S_g = 1 - group_cut_g / n_monitored  (exact, not the
+    independence product — the monitor lane sees the full outcome matrix)
+  * group cost         Σ_{i∈g} avg_cost_i, normalized by the max group
+  * group rank         gnc_g / (1 - S_g); groups evaluated rank-ascending
+  * within a group, members are ordered by miss-rate: an OR short-circuits
+    on the first PASS, so cheap high-pass-rate members go first
+    (member rank = nc_i / s_i — the conjunction formula with s ↔ 1-s).
+
+Every function here is **backend-agnostic**: it takes an array-namespace
+argument ``xp`` (``jax.numpy`` or ``numpy``) and runs the identical code
+path on either, so there is exactly one implementation of the rank math for
+the jitted device pipeline and the host (numpy) streaming path. A parity
+test pins the two bit-close.
 """
 
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import Any, NamedTuple
 
-import jax
 import jax.numpy as jnp
+import numpy as np
 
 _EPS = 1e-6
 
 
+def argsort_stable(a, xp=jnp):
+    """Stable ascending argsort; the only API seam between numpy and jnp."""
+    if xp is jnp:
+        return jnp.argsort(a, stable=True)
+    return np.argsort(a, kind="stable")
+
+
 class FilterStats(NamedTuple):
-    """Accumulators collected since the start of the current epoch."""
+    """Accumulators collected since the start of the current epoch.
 
-    num_cut: jnp.ndarray      # f32[P]
-    cost_acc: jnp.ndarray     # f32[P]
-    n_monitored: jnp.ndarray  # f32[]
+    ``group_cut`` is None for consumers that predate CNF (flat chains treat
+    every predicate as its own group, where group_cut ≡ num_cut).
+    """
+
+    num_cut: Any       # f32[P]
+    cost_acc: Any      # f32[P]
+    n_monitored: Any   # f32[]
+    group_cut: Any = None  # f32[G] | None
 
 
-def init_stats(n_predicates: int) -> FilterStats:
+def init_stats(n_predicates: int, n_groups: int | None = None,
+               xp=jnp) -> FilterStats:
+    if n_groups is None:
+        n_groups = n_predicates
     return FilterStats(
-        num_cut=jnp.zeros((n_predicates,), jnp.float32),
-        cost_acc=jnp.zeros((n_predicates,), jnp.float32),
-        n_monitored=jnp.zeros((), jnp.float32),
+        num_cut=xp.zeros((n_predicates,), xp.float32),
+        cost_acc=xp.zeros((n_predicates,), xp.float32),
+        n_monitored=xp.zeros((), xp.float32),
+        group_cut=xp.zeros((n_groups,), xp.float32),
     )
 
 
 def merge_stats(a: FilterStats, b: FilterStats) -> FilterStats:
     """Associative merge (used by the centralized scope's psum and by tests)."""
+    gc = None
+    if a.group_cut is not None and b.group_cut is not None:
+        gc = a.group_cut + b.group_cut
     return FilterStats(a.num_cut + b.num_cut, a.cost_acc + b.cost_acc,
-                       a.n_monitored + b.n_monitored)
+                       a.n_monitored + b.n_monitored, gc)
 
 
-def accumulate(stats: FilterStats, cut_counts: jnp.ndarray,
-               costs: jnp.ndarray, n_monitored) -> FilterStats:
+def accumulate(stats: FilterStats, cut_counts, costs, n_monitored,
+               group_cut=None, xp=jnp) -> FilterStats:
     """Fold one batch's monitor-lane results into the epoch accumulators."""
+    if stats.group_cut is None:
+        new_gc = None
+    else:
+        inc = cut_counts if group_cut is None else group_cut
+        new_gc = stats.group_cut + inc.astype(xp.float32)
     return FilterStats(
-        num_cut=stats.num_cut + cut_counts.astype(jnp.float32),
-        cost_acc=stats.cost_acc + costs.astype(jnp.float32),
-        n_monitored=stats.n_monitored + jnp.asarray(n_monitored, jnp.float32),
+        num_cut=stats.num_cut + cut_counts.astype(xp.float32),
+        cost_acc=stats.cost_acc + costs.astype(xp.float32),
+        n_monitored=stats.n_monitored + xp.asarray(n_monitored, xp.float32),
+        group_cut=new_gc,
     )
 
 
-def selectivities(stats: FilterStats) -> jnp.ndarray:
+def selectivities(stats: FilterStats, xp=jnp):
     """Pass fraction per predicate, from monitored rows only (paper §2.1)."""
-    n = jnp.maximum(stats.n_monitored, 1.0)
+    n = xp.maximum(stats.n_monitored, 1.0)
     s = 1.0 - stats.num_cut / n
-    return jnp.clip(s, 0.0, 1.0)
+    return xp.clip(s, 0.0, 1.0)
 
 
-def normalized_costs(stats: FilterStats) -> jnp.ndarray:
+def normalized_costs(stats: FilterStats, xp=jnp):
     """Average per-row cost, min-max-free normalization to [0,1] by the max."""
-    n = jnp.maximum(stats.n_monitored, 1.0)
+    n = xp.maximum(stats.n_monitored, 1.0)
     avg = stats.cost_acc / n
-    return avg / jnp.maximum(jnp.max(avg), _EPS)
+    return avg / xp.maximum(xp.max(avg), _EPS)
 
 
-def ranks(stats: FilterStats) -> jnp.ndarray:
+def ranks(stats: FilterStats, xp=jnp):
     """rank_i = nc_i / (1 - s_i); selective-and-cheap predicates rank lowest.
 
     The 1-s denominator is floored so an all-pass predicate gets a large but
     finite rank (it should run last — it cuts nothing).
     """
-    s = selectivities(stats)
-    nc = normalized_costs(stats)
-    return nc / jnp.maximum(1.0 - s, _EPS)
+    s = selectivities(stats, xp=xp)
+    nc = normalized_costs(stats, xp=xp)
+    return nc / xp.maximum(1.0 - s, _EPS)
 
 
-def momentum_update(adj_prev: jnp.ndarray, rank_now: jnp.ndarray,
-                    momentum, first_epoch) -> jnp.ndarray:
+def member_ranks(stats: FilterStats, xp=jnp):
+    """Within-OR-group order key: nc_i / s_i ascending.
+
+    An OR group short-circuits when a member PASSES, so the optimal member
+    order puts cheap, *high*-pass-rate (low miss-rate) members first — the
+    mirror image of the conjunction rank (s ↔ 1-s).
+    """
+    s = selectivities(stats, xp=xp)
+    nc = normalized_costs(stats, xp=xp)
+    return nc / xp.maximum(s, _EPS)
+
+
+def _group_matrix(groups, xp=jnp):
+    """f32[G, P] membership one-hot built from the static group tuple."""
+    g = np.asarray(groups, np.int64)
+    m = np.zeros((int(g.max()) + 1, len(groups)), np.float32)
+    m[g, np.arange(len(groups))] = 1.0
+    return xp.asarray(m)
+
+
+def group_selectivities(stats: FilterStats, xp=jnp):
+    """Exact P(group passes) from the monitor lane's group-cut counters."""
+    gcut = stats.group_cut if stats.group_cut is not None else stats.num_cut
+    n = xp.maximum(stats.n_monitored, 1.0)
+    return xp.clip(1.0 - gcut / n, 0.0, 1.0)
+
+
+def group_normalized_costs(stats: FilterStats, groups, xp=jnp):
+    """Group cost = Σ member avg costs, normalized to [0,1] by the max group.
+
+    For all-singleton groups this reduces exactly to ``normalized_costs``
+    (same max normalizer), keeping flat chains bit-identical to the paper
+    math.
+    """
+    n = xp.maximum(stats.n_monitored, 1.0)
+    avg = stats.cost_acc / n
+    gavg = _group_matrix(groups, xp=xp) @ avg
+    return gavg / xp.maximum(xp.max(gavg), _EPS)
+
+
+def group_ranks(stats: FilterStats, groups, xp=jnp):
+    """Group-level rank = gnc_g / (1 - S_g); ≡ ``ranks`` on flat chains."""
+    s = group_selectivities(stats, xp=xp)
+    nc = group_normalized_costs(stats, groups, xp=xp)
+    return nc / xp.maximum(1.0 - s, _EPS)
+
+
+def momentum_update(adj_prev, rank_now, momentum, first_epoch, xp=jnp):
     """First-order difference equation from the paper, with cold-start.
 
     On the very first epoch there is no history: adj_rank(0) = rank(0)
     (equivalently momentum is ignored once).
     """
-    m = jnp.asarray(momentum, jnp.float32)
+    m = xp.asarray(momentum, xp.float32)
     blended = (1.0 - m) * rank_now + m * adj_prev
-    return jnp.where(first_epoch, rank_now, blended)
+    return xp.where(first_epoch, rank_now, blended)
 
 
-def order_from_ranks(adj_rank: jnp.ndarray) -> jnp.ndarray:
+def order_from_ranks(adj_rank, xp=jnp):
     """Ascending stable sort → evaluation permutation (ties by user order)."""
-    return jnp.argsort(adj_rank, stable=True).astype(jnp.int32)
+    return argsort_stable(adj_rank, xp=xp).astype(xp.int32)
 
 
-def expected_chain_cost(costs: jnp.ndarray, pass_probs: jnp.ndarray,
-                        perm: jnp.ndarray) -> jnp.ndarray:
+def cnf_order(group_adj_rank, member_rank, groups, xp=jnp):
+    """Full CNF evaluation order from group + member ranks.
+
+    Returns (perm i32[P], group_perm i32[G]): groups concatenated in
+    group-rank-ascending order (ties by group id), members within each group
+    in member-rank-ascending order (ties by user order). Group members are
+    always CONTIGUOUS in ``perm`` — the execution engines rely on that to
+    close one OR accumulator at a time.
+
+    Built from two composed stable sorts so it is traceable under jit with
+    dynamic ranks: the primary key is each group's *position* in the sorted
+    group order (a distinct integer per group, so equal group ranks can
+    never interleave members of different groups).
+    """
+    garr = xp.asarray(np.asarray(groups, np.int32))
+    group_perm = argsort_stable(group_adj_rank, xp=xp).astype(xp.int32)
+    group_pos = argsort_stable(group_perm, xp=xp)   # inverse permutation
+    primary = group_pos[garr]                        # i32[P]
+    by_member = argsort_stable(member_rank, xp=xp)
+    perm = by_member[argsort_stable(primary[by_member], xp=xp)]
+    return perm.astype(xp.int32), group_perm
+
+
+def expected_chain_cost(costs, pass_probs, perm, xp=jnp):
     """Σ_i c_{perm[i]} Π_{j<i} s_{perm[j]} — the quantity rank order minimizes."""
     c = costs[perm]
     s = pass_probs[perm]
-    surv = jnp.concatenate([jnp.ones((1,), s.dtype), jnp.cumprod(s)[:-1]])
-    return jnp.sum(c * surv)
+    surv = xp.concatenate([xp.ones((1,), s.dtype), xp.cumprod(s)[:-1]])
+    return xp.sum(c * surv)

@@ -45,7 +45,7 @@ class Pipeline:
         self.seq_len = seq_len
         self.vocab_size = vocab_size
         self.tokens_per_row = tokens_per_row
-        self._jit_step = jax.jit(filt.step)
+        self._jit_step = filt.jit_step        # compiled once per filter
         self._fstate = filt.init_state()
         self._buffer = np.zeros((0,), np.int32)
         self.batches_emitted = 0
@@ -74,14 +74,23 @@ class Pipeline:
 
         self.stream.cursor = st.stream_cursor
         fs = st.filter_state
+        # pre-CNF checkpoints lack the group fields; for flat chains
+        # group_cut ≡ num_cut accumulators start at zero and group_perm is
+        # the identity, so these defaults restore them losslessly
+        n_groups = int(np.asarray(fs["adj_rank"]).shape[0])
         stats = FilterStats(jnp.asarray(fs["stats.num_cut"]),
                             jnp.asarray(fs["stats.cost_acc"]),
-                            jnp.asarray(fs["stats.n_monitored"]))
+                            jnp.asarray(fs["stats.n_monitored"]),
+                            jnp.asarray(fs.get("stats.group_cut",
+                                               fs["stats.num_cut"])))
         self._fstate = OrderState(
             perm=jnp.asarray(fs["perm"]), adj_rank=jnp.asarray(fs["adj_rank"]),
             stats=stats, rows_into_epoch=jnp.asarray(fs["rows_into_epoch"]),
             sample_phase=jnp.asarray(fs["sample_phase"]),
-            epoch=jnp.asarray(fs["epoch"]))
+            epoch=jnp.asarray(fs["epoch"]),
+            group_perm=jnp.asarray(fs.get("group_perm",
+                                          np.arange(n_groups,
+                                                    dtype=np.int32))))
         self._buffer = st.buffer.copy()
         self.batches_emitted = st.batches_emitted
         self.rows_in = st.rows_in

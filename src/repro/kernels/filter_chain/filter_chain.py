@@ -7,19 +7,28 @@ adaptation (DESIGN §3) processes rows in VMEM tiles:
     the whole chain is FUSED into a single pass over the data (Spark's
     operator iterator touches rows once too, but pays per-row dispatch;
     XLA's unfused jnp path would touch HBM once per predicate);
-  * predicates are evaluated vector-wise in the adaptive permutation order,
-    ANDing into a running mask; when a tile's mask empties, the remaining
-    predicates for that tile are SKIPPED (``pl.when`` — tile-granular
-    short-circuit, the vector analogue of the row-level early exit);
+  * predicates are evaluated vector-wise in the adaptive permutation order.
+    CNF structure (OR within a group, AND across groups) is tracked with a
+    running per-tile OR accumulator: members of the open group only
+    evaluate rows not yet passed (vector analogue of the OR short-circuit),
+    and when a group closes its accumulator ANDs into the running mask;
+  * when a tile has no pending rows for a position, that predicate is
+    SKIPPED for the tile (``lax.cond`` — tile-granular short-circuit, the
+    vector analogue of the row-level early exit);
   * the monitor lane (paper §2.1) evaluates ALL predicates on
-    stride-sampled rows and emits per-tile numCut / monitored counts;
+    stride-sampled rows and emits per-tile numCut / per-GROUP cut /
+    monitored counts;
   * per-tile ``active_before`` counters reproduce the row-level work model
-    exactly (they count rows alive before each chain position), so the
+    exactly (they count rows pending before each chain position), so the
     paper's cost accounting survives vectorization bit-exactly.
 
 Memory layout: predicate spec arrays (i32/f32[P]) live in SMEM (scalar
-dispatch data); column tiles and outputs in VMEM. All intra-kernel compute
-is 2D (1, TILE)-shaped for VPU lane alignment; TILE is a multiple of 128.
+dispatch data); column tiles and outputs in VMEM. The CNF group ids ride
+twice: as an SMEM i32[P] vector for the perm-ordered chain lane (the
+permutation is dynamic) and as a STATIC python tuple for the monitor lane's
+group reduction (user order → unrolled at trace time). All intra-kernel
+compute is 2D (1, TILE)-shaped for VPU lane alignment; TILE is a multiple
+of 128.
 
 Grid-step cost model (for §Roofline): bytes/tile = C·TILE·4 in + TILE out;
 FLOPs/tile ≈ TILE · Σ_{k ≤ stop} cost(perm[k]) — memory-bound at ~0.25–2
@@ -68,29 +77,40 @@ def _eval_pred_tile(cols_ref, col_idx, op, t1, t2, rounds):
 
 
 def _kernel(# --- SMEM scalar/spec refs ---
-            col_ref, op_ref, t1_ref, t2_ref, rounds_ref, perm_ref,
+            col_ref, op_ref, t1_ref, t2_ref, rounds_ref, perm_ref, group_ref,
             meta_ref,  # i32[4]: (n_rows, collect_rate, sample_phase, mode)
             # --- VMEM data refs ---
             cols_ref,
             # --- outputs ---
-            mask_ref, active_ref, cut_ref, nmon_ref,
-            *, n_preds: int, tile: int):
+            mask_ref, active_ref, cut_ref, gcut_ref, nmon_ref,
+            *, n_preds: int, tile: int, groups: tuple):
     t = pl.program_id(0)
     n_rows = meta_ref[0]
     collect_rate = meta_ref[1]
     sample_phase = meta_ref[2]
     block_mode = meta_ref[3]
+    flat = len(set(groups)) == len(groups)   # static: all-singleton groups
 
     lane = jax.lax.broadcasted_iota(jnp.int32, (1, tile), 1)
     gidx = t * tile + lane
     valid = gidx < n_rows                                    # bool(1, TILE)
 
     # ----------------------------------------------------------- chain lane
-    mask = valid
+    mask = valid                              # survivors of closed groups
+    group_or = jnp.zeros((1, tile), bool)     # passes within the open group
     for k in range(n_preds):                 # P static → unrolled on-chip
-        alive = jnp.sum(mask.astype(jnp.float32))
-        active_ref[0, k] = alive
         pidx = perm_ref[k]
+        # group-boundary flags: static True when flat; dynamic SMEM scalar
+        # comparisons otherwise (the permutation is data-dependent).
+        is_first = True if (flat or k == 0) \
+            else group_ref[perm_ref[k - 1]] != group_ref[pidx]
+        closes = True if (flat or k == n_preds - 1) \
+            else group_ref[perm_ref[k + 1]] != group_ref[pidx]
+        pending = mask if is_first is True \
+            else jnp.where(is_first, mask,
+                           jnp.logical_and(mask, jnp.logical_not(group_or)))
+        alive = jnp.sum(pending.astype(jnp.float32))
+        active_ref[0, k] = alive
         res = jax.lax.cond(
             alive > 0.0,
             lambda: _eval_pred_tile(cols_ref, col_ref[pidx], op_ref[pidx],
@@ -98,7 +118,11 @@ def _kernel(# --- SMEM scalar/spec refs ---
                                     rounds_ref[pidx]),
             lambda: jnp.zeros((1, tile), bool),   # tile short-circuit
         )
-        mask = jnp.logical_and(mask, res)
+        group_or = res if is_first is True \
+            else jnp.where(is_first, res, jnp.logical_or(group_or, res))
+        new_mask = jnp.logical_and(mask, group_or)
+        mask = new_mask if closes is True \
+            else jnp.where(closes, new_mask, mask)
     mask_ref[0, :] = mask[0].astype(jnp.int8)
 
     # --------------------------------------------------------- monitor lane
@@ -116,18 +140,33 @@ def _kernel(# --- SMEM scalar/spec refs ---
     n_sampled = jnp.sum(sampled.astype(jnp.float32))
     nmon_ref[0, 0] = n_sampled
 
+    members: list[list[int]] = [[] for _ in range(max(groups) + 1)]
+    for i, g in enumerate(groups):
+        members[g].append(i)
+
     @pl.when(n_sampled > 0.0)
     def _monitor():
+        fails = []
         for p in range(n_preds):             # ALL predicates, user order
             res = _eval_pred_tile(cols_ref, col_ref[p], op_ref[p],
                                   t1_ref[p], t2_ref[p], rounds_ref[p])
-            cut = jnp.logical_and(sampled, jnp.logical_not(res))
-            cut_ref[0, p] = jnp.sum(cut.astype(jnp.float32))
+            fail = jnp.logical_not(res)
+            fails.append(fail)
+            cut_ref[0, p] = jnp.sum(
+                jnp.logical_and(sampled, fail).astype(jnp.float32))
+        for gi, mem in enumerate(members):   # static group reduction
+            gfail = fails[mem[0]]
+            for m in mem[1:]:
+                gfail = jnp.logical_and(gfail, fails[m])
+            gcut_ref[0, gi] = jnp.sum(
+                jnp.logical_and(sampled, gfail).astype(jnp.float32))
 
     @pl.when(n_sampled == 0.0)
     def _no_monitor():
         for p in range(n_preds):
             cut_ref[0, p] = 0.0
+        for gi in range(len(members)):
+            gcut_ref[0, gi] = 0.0
 
 
 def filter_chain_pallas(columns: jnp.ndarray, specs, perm: jnp.ndarray,
@@ -136,40 +175,46 @@ def filter_chain_pallas(columns: jnp.ndarray, specs, perm: jnp.ndarray,
     """Launch the fused chain kernel.
 
     columns: f32[C, R_padded] with R_padded % tile == 0.
-    meta:    i32[3] = (n_rows_actual, collect_rate, sample_phase).
+    meta:    i32[4] = (n_rows_actual, collect_rate, sample_phase, mode).
     Returns (mask i8[1,Rp], active f32[n_tiles,P], cut f32[n_tiles,P],
-             nmon f32[n_tiles,1]).
+             gcut f32[n_tiles,G], nmon f32[n_tiles,1]).
     """
     n_cols, n_rows_p = columns.shape
     if n_rows_p % tile:
         raise ValueError(f"padded rows {n_rows_p} not a multiple of tile {tile}")
     n_tiles = n_rows_p // tile
     n_preds = int(specs.column.shape[0])
+    groups = specs.groups                    # static tuple (pytree aux)
+    n_groups = max(groups) + 1
+    garr = jnp.asarray(groups, jnp.int32)
 
     smem = functools.partial(pl.BlockSpec, memory_space=pltpu.SMEM)
     grid = (n_tiles,)
 
-    kernel = functools.partial(_kernel, n_preds=n_preds, tile=tile)
+    kernel = functools.partial(_kernel, n_preds=n_preds, tile=tile,
+                               groups=groups)
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
-            smem(), smem(), smem(), smem(), smem(), smem(), smem(),
+            smem(), smem(), smem(), smem(), smem(), smem(), smem(), smem(),
             pl.BlockSpec((n_cols, tile), lambda i: (0, i)),
         ],
         out_specs=[
             pl.BlockSpec((1, tile), lambda i: (0, i)),
             pl.BlockSpec((1, n_preds), lambda i: (i, 0)),
             pl.BlockSpec((1, n_preds), lambda i: (i, 0)),
+            pl.BlockSpec((1, n_groups), lambda i: (i, 0)),
             pl.BlockSpec((1, 1), lambda i: (i, 0)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((1, n_rows_p), jnp.int8),
             jax.ShapeDtypeStruct((n_tiles, n_preds), jnp.float32),
             jax.ShapeDtypeStruct((n_tiles, n_preds), jnp.float32),
+            jax.ShapeDtypeStruct((n_tiles, n_groups), jnp.float32),
             jax.ShapeDtypeStruct((n_tiles, 1), jnp.float32),
         ],
         interpret=interpret,
         name="adaptive_filter_chain",
-    )(specs.column, specs.op, specs.t1, specs.t2, specs.rounds, perm, meta,
-      columns)
+    )(specs.column, specs.op, specs.t1, specs.t2, specs.rounds, perm, garr,
+      meta, columns)

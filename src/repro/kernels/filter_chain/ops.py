@@ -14,7 +14,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.filter_exec import ChainResult
+from repro.core.engine.base import ChainResult
 from repro.core.predicates import PredicateSpecs
 from repro.kernels.filter_chain.filter_chain import (DEFAULT_TILE,
                                                      filter_chain_pallas)
@@ -30,7 +30,7 @@ def filter_chain(columns: jnp.ndarray, specs: PredicateSpecs,
                  perm: jnp.ndarray, *, collect_rate: int,
                  sample_phase, tile: int = DEFAULT_TILE,
                  monitor_mode: str = "row") -> ChainResult:
-    """Fused adaptive chain over f32[C, R]; same contract as run_chain.
+    """Fused adaptive CNF chain over f32[C, R]; same contract as run_chain.
 
     monitor_mode: "row" = the paper's stride sampling (bit-exact vs the
     oracle); "block" = contiguous 128-lane slices of every Nth tile — the
@@ -48,7 +48,7 @@ def filter_chain(columns: jnp.ndarray, specs: PredicateSpecs,
                       jnp.asarray(1 if monitor_mode == "block" else 0,
                                   jnp.int32)])
 
-    mask_i8, active, cut, nmon = filter_chain_pallas(
+    mask_i8, active, cut, gcut, nmon = filter_chain_pallas(
         columns, specs, perm.astype(jnp.int32), meta, tile=tile,
         interpret=_should_interpret())
 
@@ -63,4 +63,5 @@ def filter_chain(columns: jnp.ndarray, specs: PredicateSpecs,
         cut_counts=jnp.sum(cut, axis=0),
         n_monitored=n_monitored,
         monitor_cost=specs.static_cost * n_monitored,
+        group_cut_counts=jnp.sum(gcut, axis=0),
     )

@@ -2,17 +2,20 @@
 
 Deliberately computed a *different* way from both the kernel and
 ``core.filter_exec.run_chain``: the dense [P, R] outcome matrix is built
-up-front (no laziness, no tiling) and the chain is derived from prefix
-products — so a bug in the lazy/tiled paths cannot hide in the oracle.
-Row-level work accounting (the Spark model) falls out of the prefix masks.
+up-front (no laziness, no tiling, no masked short-circuit) and the CNF
+chain — mask, pending counts, group cuts — is derived from that matrix with
+plain boolean algebra, so a bug in the lazy/tiled paths cannot hide in the
+oracle. Row-level work accounting (the Spark model with OR- and AND-level
+short-circuit) falls out of the per-position pending masks.
 """
 
 from __future__ import annotations
 
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import predicates as pred_lib
-from repro.core.filter_exec import ChainResult
+from repro.core.engine.base import ChainResult
 from repro.core.predicates import PredicateSpecs
 
 
@@ -21,27 +24,46 @@ def filter_chain_ref(columns: jnp.ndarray, specs: PredicateSpecs,
                      sample_phase) -> ChainResult:
     n_rows = columns.shape[1]
     outcomes = pred_lib.eval_all(specs, columns)          # bool[P, R]
+    groups = np.asarray(specs.groups)
+    perm_host = [int(i) for i in np.asarray(perm)]        # oracle runs eager
 
-    ordered = outcomes[perm]                              # chain order
-    prefix = jnp.cumprod(ordered.astype(jnp.int32), axis=0)  # alive after k+1
-    mask = prefix[-1].astype(bool)
+    # group pass matrix (order-invariant): row passes group g iff ANY member
+    # passes; the chain mask is the AND over groups.
+    gpass = jnp.stack([jnp.any(outcomes[jnp.asarray(m)], axis=0)
+                       for m in specs.group_members])     # bool[G, R]
+    mask = jnp.all(gpass, axis=0)
 
-    alive_after = jnp.sum(prefix, axis=1).astype(jnp.float32)   # f32[P]
-    active_before = jnp.concatenate(
-        [jnp.full((1,), float(n_rows), jnp.float32), alive_after[:-1]])
-    work = jnp.sum(active_before * specs.static_cost[perm])
+    # work model: walk perm positions; a row is pending at position k iff it
+    # passed every group already CLOSED and no earlier member of the OPEN
+    # group. (Groups are contiguous in perm by construction.)
+    closed_pass = jnp.ones((n_rows,), bool)
+    seen_or = jnp.zeros((n_rows,), bool)
+    active_before = []
+    work = jnp.zeros((), jnp.float32)
+    for k, i in enumerate(perm_host):
+        if k > 0 and groups[perm_host[k - 1]] != groups[i]:
+            closed_pass = jnp.logical_and(closed_pass,
+                                          gpass[int(groups[perm_host[k - 1]])])
+            seen_or = jnp.zeros((n_rows,), bool)
+        pending = jnp.logical_and(closed_pass, ~seen_or)
+        alive = jnp.sum(pending).astype(jnp.float32)
+        active_before.append(alive)
+        work = work + alive * specs.static_cost[i]
+        seen_or = jnp.logical_or(seen_or, outcomes[i])
 
     # monitor lane: stride-sampled rows, ALL predicates (user order)
     gidx = jnp.arange(n_rows, dtype=jnp.int32)
     sampled = ((gidx + sample_phase) % collect_rate) == 0
     cut = jnp.sum(jnp.logical_and(~outcomes, sampled[None, :]), axis=1)
+    group_cut = jnp.sum(jnp.logical_and(~gpass, sampled[None, :]), axis=1)
     n_monitored = jnp.sum(sampled).astype(jnp.float32)
 
     return ChainResult(
         mask=mask,
         work_units=work,
-        active_before=active_before,
+        active_before=jnp.stack(active_before),
         cut_counts=cut.astype(jnp.float32),
         n_monitored=n_monitored,
         monitor_cost=specs.static_cost * n_monitored,
+        group_cut_counts=group_cut.astype(jnp.float32),
     )

@@ -27,11 +27,24 @@ from repro.models.registry import batch_for, build_model
 
 def guardrail_chain():
     """Request-feature predicates: col0=prompt_len, col1=abuse_score,
-    col2=user_budget. Admission = pass all."""
+    col2=user_budget, col3=allowlist flag. Admission policy (CNF):
+
+        len_ok AND (allowlisted OR budget_ok) AND (allowlisted OR abuse_ok)
+
+    i.e. ``allowlisted OR (budget_ok AND abuse_ok)`` distributed into
+    AND-of-OR groups — allowlisted traffic skips the expensive budget/abuse
+    checks via the OR short-circuit, and the adaptive ordering learns to
+    probe the cheap allowlist bit first when allowlisted traffic dominates.
+    """
+    allow = dict(column=3, op=OP_GT, t1=0.5, static_cost=0.2)
     return [
         Predicate("len_ok", column=0, op=OP_LT, t1=900.0, static_cost=1.0),
-        Predicate("abuse_ok", column=1, op=OP_LT, t1=0.92, static_cost=4.0),
-        Predicate("budget_ok", column=2, op=OP_GT, t1=10.0, static_cost=1.5),
+        Predicate("allow_b", group="allow_or_budget", **allow),
+        Predicate("budget_ok", column=2, op=OP_GT, t1=10.0, static_cost=1.5,
+                  group="allow_or_budget"),
+        Predicate("allow_a", group="allow_or_abuse", **allow),
+        Predicate("abuse_ok", column=1, op=OP_LT, t1=0.92, static_cost=4.0,
+                  group="allow_or_abuse"),
     ]
 
 
@@ -56,7 +69,7 @@ def main() -> None:
         AdaptiveFilterConfig(ordering=OrderingConfig(
             collect_rate=4, calculate_rate=64, momentum=0.3)))
     fstate = filt.init_state()
-    fstep = jax.jit(filt.step)
+    fstep = filt.jit_step
 
     rng = np.random.default_rng(0)
     admitted = rejected = 0
@@ -64,7 +77,9 @@ def main() -> None:
     for i in range(0, args.requests, args.batch):
         feats = np.stack([rng.normal(600, 250, args.batch),
                           rng.beta(2, 8, args.batch),
-                          rng.normal(50, 30, args.batch)]).astype(np.float32)
+                          rng.normal(50, 30, args.batch),
+                          (rng.uniform(size=args.batch) < 0.3).astype(float),
+                          ]).astype(np.float32)
         fstate, mask, fmetrics = fstep(fstate, jnp.asarray(feats))
         mask = np.asarray(mask)
         admitted += int(mask.sum())
@@ -88,7 +103,7 @@ def main() -> None:
     dt = time.time() - t0
     print(f"[serve] admitted={admitted} rejected={rejected} "
           f"guardrail perm={np.asarray(fstate.perm).tolist()} "
-          f"({dt:.1f}s)")
+          f"epochs={int(fstate.epoch)} ({dt:.1f}s)")
 
 
 def _grow_cache(model, cache, batch, capacity):

@@ -20,7 +20,7 @@ import numpy as np
 from repro.configs import ARCHS, get_config, get_smoke_config
 from repro.configs.paper_filters import DEFAULT as PAPER
 from repro.core import (AdaptiveFilter, AdaptiveFilterConfig, OrderingConfig,
-                        paper_filters_4)
+                        paper_filters_4, paper_filters_cnf)
 from repro.data.pipeline import Pipeline
 from repro.data.stream import DriftConfig, LogStream
 from repro.launch.steps import make_train_step
@@ -31,9 +31,10 @@ from repro.runtime import FailureInjector, TrainDriver
 
 def build_pipeline(cfg, *, batch: int, seq: int, total_rows: int,
                    ordering: OrderingConfig, drift: DriftConfig,
-                   shard_id: int = 0, num_shards: int = 1) -> Pipeline:
-    filt = AdaptiveFilter(paper_filters_4("fig1"),
-                          AdaptiveFilterConfig(ordering=ordering))
+                   shard_id: int = 0, num_shards: int = 1,
+                   chain: str = "flat") -> Pipeline:
+    preds = (paper_filters_cnf if chain == "cnf" else paper_filters_4)("fig1")
+    filt = AdaptiveFilter(preds, AdaptiveFilterConfig(ordering=ordering))
     stream = LogStream(total_rows=total_rows, batch_rows=65536,
                        drift=drift, shard_id=shard_id, num_shards=num_shards)
     return Pipeline(stream, filt, batch_size=batch, seq_len=seq,
@@ -50,6 +51,9 @@ def main() -> None:
     ap.add_argument("--seq", type=int, default=256)
     ap.add_argument("--rows", type=int, default=20_000_000)
     ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--chain", choices=["flat", "cnf"], default="flat",
+                    help="filter shape: the paper's conjunction or its "
+                         "CNF (AND-of-OR) variant")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--resume", action="store_true")
@@ -71,7 +75,7 @@ def main() -> None:
                               momentum=PAPER.ordering.momentum)
     pipeline = build_pipeline(cfg, batch=args.batch, seq=args.seq,
                               total_rows=args.rows, ordering=ordering,
-                              drift=PAPER.drift)
+                              drift=PAPER.drift, chain=args.chain)
 
     driver = TrainDriver(step_fn=step_fn, pipeline=pipeline, params=params,
                          opt_state=opt_state, ckpt_dir=args.ckpt_dir,

@@ -1,8 +1,18 @@
 """Shared fixtures. NOTE: no XLA_FLAGS here — tests must see 1 CPU device
 (contract §MULTI-POD 0); multi-device tests run in subprocesses."""
 
+import importlib.util
+import os
+import sys
+
 import numpy as np
 import pytest
+
+# make ``repro`` importable for a plain ``pytest`` invocation when the
+# package is not pip-installed (no PYTHONPATH=src needed)
+if importlib.util.find_spec("repro") is None:
+    sys.path.insert(0, os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src")))
 
 
 @pytest.fixture

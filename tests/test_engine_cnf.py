@@ -1,0 +1,226 @@
+"""CNF (AND-of-OR) conformance across the engine registry.
+
+Pins the tentpole contract: jnp ≡ pallas-interpret ≡ numpy ≡ dense oracle
+on OR-group chains — masks exactly, counters bit-close — plus the engine
+registry surface and the group-aware ordering behavior."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (AdaptiveFilter, AdaptiveFilterConfig, MonitorSpec,
+                        OrderingConfig, available_engines, get_engine, pack)
+from repro.core import predicates as P
+from repro.core import stats as S
+from repro.core.predicates import Predicate
+from repro.kernels.filter_chain.ref import filter_chain_ref
+
+ENGINES = ("jnp", "pallas", "numpy")
+
+
+def cnf_chain(shape="pair"):
+    """Chains over 4 columns with OR-groups of different widths."""
+    base = dict(static_cost=1.0)
+    if shape == "pair":
+        # (gt OR lt) AND between AND (eq OR mix)
+        return [
+            Predicate("gt", 0, P.OP_GT, 0.6, group="a", **base),
+            Predicate("lt", 1, P.OP_LT, 0.3, group="a", static_cost=1.3),
+            Predicate("bet", 0, P.OP_BETWEEN, 0.1, t2=0.9, static_cost=2.0),
+            Predicate("eq", 2, P.OP_EQ, 3.0, group="b", static_cost=0.7),
+            Predicate("mix", 3, P.OP_HASHMIX, 0.45 * P.MIX_MOD, rounds=6,
+                      group="b", static_cost=6.0),
+        ]
+    if shape == "wide":
+        # gt AND (lt OR bet OR eq)
+        return [
+            Predicate("gt", 0, P.OP_GT, 0.2, **base),
+            Predicate("lt", 1, P.OP_LT, 0.2, group="w", static_cost=1.3),
+            Predicate("bet", 0, P.OP_BETWEEN, 0.4, t2=0.6, group="w",
+                      static_cost=2.0),
+            Predicate("eq", 2, P.OP_EQ, 5.0, group="w", static_cost=0.7),
+        ]
+    if shape == "single_group":
+        # one big OR over everything
+        return [
+            Predicate("gt", 0, P.OP_GT, 0.9, group="o", **base),
+            Predicate("lt", 1, P.OP_LT, 0.05, group="o", static_cost=1.3),
+            Predicate("eq", 2, P.OP_EQ, 7.0, group="o", static_cost=0.7),
+        ]
+    raise ValueError(shape)
+
+
+def cols_for(n_rows, seed=0):
+    r = np.random.default_rng(seed)
+    return np.stack([
+        r.uniform(0, 1, n_rows),
+        r.uniform(0, 1, n_rows),
+        r.integers(0, 8, n_rows).astype(np.float64),
+        r.uniform(0, P.MIX_MOD, n_rows),
+    ]).astype(np.float32)
+
+
+def group_contig_perms(specs, seed):
+    """A few random perms that keep group members contiguous."""
+    r = np.random.default_rng(seed)
+    members = [list(m) for m in specs.group_members]
+    perms = []
+    for _ in range(3):
+        order = r.permutation(len(members))
+        perm = []
+        for g in order:
+            mem = list(members[g])
+            r.shuffle(mem)
+            perm.extend(mem)
+        perms.append(np.asarray(perm, np.int32))
+    return perms
+
+
+@pytest.mark.parametrize("shape", ["pair", "wide", "single_group"])
+@pytest.mark.parametrize("n_rows", [64, 2048, 5000])
+def test_engines_agree_on_cnf(shape, n_rows):
+    preds = cnf_chain(shape)
+    specs = pack(preds)
+    cols_np = cols_for(n_rows, seed=n_rows)
+    cols = jnp.asarray(cols_np)
+    for perm in group_contig_perms(specs, seed=n_rows):
+        mon = MonitorSpec(collect_rate=37, sample_phase=5)
+        ref = filter_chain_ref(cols, specs, jnp.asarray(perm),
+                               collect_rate=37, sample_phase=5)
+        for name in ENGINES:
+            eng = get_engine(name)
+            data = cols if eng.traceable else cols_np
+            got = eng.run_chain(data, specs, jnp.asarray(perm), mon)
+            for field in got._fields:
+                kw = {} if field in ("mask", "cut_counts", "n_monitored",
+                                     "group_cut_counts") else {"rtol": 1e-6}
+                cmp = np.testing.assert_array_equal if not kw \
+                    else np.testing.assert_allclose
+                cmp(np.asarray(getattr(got, field)),
+                    np.asarray(getattr(ref, field)),
+                    err_msg=f"{name} vs oracle mismatch in {field} "
+                            f"(shape={shape}, perm={perm.tolist()})", **kw)
+
+
+def test_cnf_mask_is_and_of_ors():
+    """Hand-checked truth table on a tiny batch."""
+    preds = [Predicate("x_hi", 0, P.OP_GT, 0.5, group="g"),
+             Predicate("y_hi", 1, P.OP_GT, 0.5, group="g"),
+             Predicate("z_hi", 2, P.OP_GT, 0.5)]
+    specs = pack(preds)
+    cols = np.asarray([[0.9, 0.1, 0.9, 0.1],
+                       [0.9, 0.9, 0.1, 0.1],
+                       [0.9, 0.9, 0.9, 0.9]], np.float32)
+    want = [(0.9 > 0.5 or 0.9 > 0.5) and True,
+            (0.1 > 0.5 or 0.9 > 0.5) and True,
+            (0.9 > 0.5 or 0.1 > 0.5) and True,
+            (0.1 > 0.5 or 0.1 > 0.5) and True]
+    mon = MonitorSpec(collect_rate=2, sample_phase=0)
+    for name in ENGINES:
+        eng = get_engine(name)
+        data = cols if not eng.traceable else jnp.asarray(cols)
+        got = eng.run_chain(data, specs, jnp.arange(3, dtype=jnp.int32), mon)
+        assert np.asarray(got.mask).tolist() == want, name
+
+
+def test_or_short_circuit_work_accounting():
+    """Rows that pass the first OR member must not be charged the second."""
+    preds = [Predicate("always", 0, P.OP_GT, -1.0, group="g"),
+             Predicate("mix", 3, P.OP_HASHMIX, 0.5 * P.MIX_MOD, rounds=8,
+                       group="g", static_cost=9.0)]
+    specs = pack(preds)
+    cols = cols_for(4096, seed=1)
+    mon = MonitorSpec(collect_rate=1 << 20, sample_phase=1)
+    for name in ENGINES:
+        eng = get_engine(name)
+        data = cols if not eng.traceable else jnp.asarray(cols)
+        got = eng.run_chain(data, specs, jnp.arange(2, dtype=jnp.int32), mon)
+        np.testing.assert_allclose(np.asarray(got.active_before),
+                                   [4096.0, 0.0], err_msg=name)
+        assert float(got.work_units) == pytest.approx(4096.0)
+        assert int(np.asarray(got.mask).sum()) == 4096
+
+
+def test_flat_chain_is_singleton_groups():
+    specs = pack([Predicate("a", 0, P.OP_GT, 0.5),
+                  Predicate("b", 1, P.OP_LT, 0.5)])
+    assert specs.is_flat
+    assert specs.groups == (0, 1)
+    assert specs.group_members == ((0,), (1,))
+
+
+def test_group_normalization_first_appearance():
+    preds = [Predicate("a", 0, P.OP_GT, 0.1, group="z"),
+             Predicate("b", 1, P.OP_GT, 0.2, group="z"),
+             Predicate("c", 2, P.OP_GT, 0.3),
+             Predicate("d", 3, P.OP_GT, 0.4, group=7)]
+    assert P.normalize_groups(preds) == (0, 0, 1, 2)
+
+
+def test_non_adjacent_group_members_rejected():
+    """The jit-traced engines can't detect interleaved group layouts at
+    runtime, so pack() must reject them eagerly."""
+    preds = [Predicate("a", 0, P.OP_GT, 0.1, group="z"),
+             Predicate("b", 1, P.OP_GT, 0.2),
+             Predicate("c", 2, P.OP_GT, 0.3, group="z")]
+    with pytest.raises(ValueError, match="not contiguous"):
+        pack(preds)
+    # ...including layouts produced by static_filter's up-front reorder
+    from repro.core import static_filter
+    ok = [Predicate("a", 0, P.OP_GT, 0.1, group="z"),
+          Predicate("b", 1, P.OP_GT, 0.2, group="z"),
+          Predicate("c", 2, P.OP_GT, 0.3)]
+    with pytest.raises(ValueError, match="not contiguous"):
+        static_filter(ok, order=[0, 2, 1])
+    static_filter(ok, order=[2, 0, 1])      # group stays adjacent: fine
+
+
+def test_registry_surface():
+    assert set(ENGINES) <= set(available_engines())
+    with pytest.raises(ValueError, match="unknown filter engine"):
+        get_engine("cuda")
+    with pytest.raises(ValueError, match="bad backend"):
+        AdaptiveFilterConfig(backend="cuda")
+
+
+def test_cnf_order_keeps_groups_contiguous():
+    groups = (0, 1, 1, 2, 2, 2)
+    r = np.random.default_rng(0)
+    for _ in range(20):
+        grank = jnp.asarray(r.uniform(0, 1, 3), jnp.float32)
+        mrank = jnp.asarray(r.uniform(0, 1, 6), jnp.float32)
+        perm, gperm = S.cnf_order(grank, mrank, groups)
+        seq = [groups[i] for i in np.asarray(perm)]
+        runs = [x for j, x in enumerate(seq) if j == 0 or seq[j - 1] != x]
+        assert len(set(runs)) == len(runs), seq
+        assert sorted(np.asarray(perm).tolist()) == list(range(6))
+        # groups appear in gperm (rank-ascending) order
+        assert runs == np.asarray(gperm).tolist()
+
+
+def test_adaptive_learns_within_group_order():
+    """In an OR group (cheap rare-pass, expensive frequent-pass), member
+    ordering must converge to the cost-aware miss-rate rule nc/s — and the
+    whole group (cuts almost nothing) must sink behind the selective
+    singleton."""
+    preds = [
+        Predicate("sel", 0, P.OP_LT, 0.3),                       # cuts 70%
+        Predicate("rare", 1, P.OP_GT, 0.9, group="o"),           # passes 10%
+        Predicate("often", 1, P.OP_GT, 0.1, group="o",
+                  static_cost=1.0),                              # passes 90%
+    ]
+    filt = AdaptiveFilter(preds, AdaptiveFilterConfig(
+        ordering=OrderingConfig(collect_rate=20, calculate_rate=40_000,
+                                momentum=0.3)))
+    state = filt.init_state()
+    r = np.random.default_rng(0)
+    for b in range(8):
+        cols = np.stack([r.uniform(0, 1, 16_384),
+                         r.uniform(0, 1, 16_384)]).astype(np.float32)
+        state, _, _ = filt.jit_step(state, jnp.asarray(cols))
+    assert int(state.epoch) >= 2
+    perm = np.asarray(state.perm).tolist()
+    # selective singleton first; "often" resolves the OR for 90% of rows at
+    # equal cost, so it must precede "rare" inside the group
+    assert perm[0] == 0
+    assert perm.index(2) < perm.index(1)

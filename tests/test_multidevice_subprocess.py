@@ -9,6 +9,10 @@ import textwrap
 
 import pytest
 
+# each case forks a fresh interpreter (jax re-import + multi-device init):
+# minutes, not seconds — excluded from the fast tier via -m "not slow"
+pytestmark = pytest.mark.slow
+
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 

@@ -15,6 +15,9 @@ import itertools
 
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import np_exec, predicates as P, stats as S
