@@ -1,0 +1,136 @@
+"""Scaling sweep for the sharded adaptive filter: shards × scope × drift.
+
+For each (shards, scope, drift) cell the bench times the jitted shard_map
+step over per-shard batches of the synthetic log stream and emits the
+benchmark CSV contract rows ``name,us_per_call,derived``:
+
+  sharding/s4/centralized/regime,1234.5678,shards=4;scope=centralized;...
+
+What the sweep shows (paper §2.2 at execution scale): PER_SHARD steps cost
+the same at any shard count (zero collectives — embarrassingly parallel),
+CENTRALIZED adds the per-step psum of the (2P+G+1)-float stat vector, and
+``--compact`` adds the fixed-capacity survivor gather. Under ``regime``
+drift the per-shard scope lets shards track their own slice while
+CENTRALIZED averages the regimes away — the trade-off the paper measures.
+
+Host-device-count override (CI has one CPU): ``--devices N`` injects
+``--xla_force_host_platform_device_count=N`` into XLA_FLAGS *before* jax is
+imported, so the whole sweep runs on a forced N-device host platform.
+
+Usage:
+  PYTHONPATH=src python benchmarks/sharding.py --devices 4
+  PYTHONPATH=src python benchmarks/sharding.py --devices 4 --compact \
+      --shards 1,2,4 --scopes per_shard,centralized --drifts none,regime
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def parse_args():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--devices", type=int, default=4,
+                    help="forced host-platform device count (set before "
+                         "jax import); 0 = use the visible devices as-is")
+    ap.add_argument("--shards", default="1,2,4",
+                    help="comma list of shard counts to sweep")
+    ap.add_argument("--scopes", default="per_shard,centralized,per_batch")
+    ap.add_argument("--drifts", default="none,regime")
+    ap.add_argument("--batch-rows", type=int, default=65536,
+                    help="rows per shard per step")
+    ap.add_argument("--steps", type=int, default=8,
+                    help="timed steps per cell (after one compile call)")
+    ap.add_argument("--compact", action="store_true",
+                    help="also time the device-side compaction step")
+    return ap.parse_args()
+
+
+def main():
+    args = parse_args()
+    if args.devices:
+        flags = os.environ.get("XLA_FLAGS", "")
+        if "xla_force_host_platform_device_count" not in flags:
+            os.environ["XLA_FLAGS"] = (
+                f"{flags} --xla_force_host_platform_device_count="
+                f"{args.devices}").strip()
+
+    # jax import AFTER the XLA_FLAGS override — device count is fixed at init
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import (AdaptiveFilterConfig, OrderingConfig,
+                            ShardedAdaptiveFilter, paper_filters_4)
+    from repro.data.stream import DriftConfig, gen_batch
+
+    shard_counts = [int(s) for s in args.shards.split(",") if s]
+    scopes = [s for s in args.scopes.split(",") if s]
+    drifts = [d for d in args.drifts.split(",") if d]
+    ordering = OrderingConfig(collect_rate=1000,
+                              calculate_rate=args.batch_rows * 2)
+    preds = paper_filters_4("fig1")
+
+    for n_shards in shard_counts:
+        if n_shards > jax.device_count():
+            print(f"# skip shards={n_shards}: only {jax.device_count()} "
+                  f"devices visible", file=sys.stderr)
+            continue
+        mesh = jax.make_mesh((n_shards,), ("data",))
+        for scope in scopes:
+            for drift_kind in drifts:
+                drift = DriftConfig(kind=drift_kind,
+                                    period_rows=args.batch_rows * 4)
+                cfg = AdaptiveFilterConfig(
+                    scope=scope, ordering=ordering,
+                    compact_output=args.compact)
+                filt = ShardedAdaptiveFilter(preds, cfg, mesh=mesh)
+                step = (filt.jit_step_compact if args.compact
+                        else filt.jit_step)
+
+                # per-shard round-robin batches, like ShardedPipeline feeds;
+                # pre-generated and pre-transferred so the timed region
+                # measures ONLY the sharded step, not host data generation
+                def block(step_idx):
+                    cols = [gen_batch(0, step_idx * n_shards + s,
+                                      (step_idx * n_shards + s)
+                                      * args.batch_rows,
+                                      args.batch_rows, drift)
+                            for s in range(n_shards)]
+                    return jnp.asarray(np.concatenate(cols, axis=1))
+
+                blocks = [block(i) for i in range(args.steps + 1)]
+                jax.block_until_ready(blocks)
+
+                state = filt.init_state()
+                out = step(state, blocks[0])         # compile + warm
+                state = out[0]
+                jax.block_until_ready(state)
+
+                t0 = time.perf_counter()
+                for i in range(1, args.steps + 1):
+                    out = step(state, blocks[i])
+                    state = out[0]
+                jax.block_until_ready(state)
+                wall = time.perf_counter() - t0
+
+                us_per_call = wall * 1e6 / args.steps
+                metrics = out[-1]
+                rows_per_call = n_shards * args.batch_rows
+                us_per_mrow = wall * 1e6 / (args.steps * rows_per_call / 1e6)
+                name = f"sharding/s{n_shards}/{scope}/{drift_kind}" + (
+                    "/compact" if args.compact else "")
+                derived = (f"shards={n_shards};scope={scope};"
+                           f"drift={drift_kind};rows_per_call={rows_per_call};"
+                           f"epochs={int(np.asarray(metrics.epoch).max())};"
+                           f"us_per_mrow={us_per_mrow:.1f}")
+                print(f"{name},{us_per_call:.4f},{derived}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Version portability shims for the jax API surface we depend on.
+
+``shard_map`` graduated from ``jax.experimental.shard_map`` (jax <= 0.4.x,
+replication checker flag ``check_rep``) to ``jax.shard_map`` (flag renamed
+``check_vma``). Every shard_map call site in this repo goes through
+:func:`shard_map` below so the codebase runs on both; pass ``check_vma``
+with the new-API meaning and it is translated for the old API.
+"""
+
+from __future__ import annotations
+
+import jax
+
+try:
+    _shard_map_new = jax.shard_map          # jax >= 0.5
+except AttributeError:
+    _shard_map_new = None
+    from jax.experimental.shard_map import shard_map as _shard_map_old
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool | None = None):
+    """``jax.shard_map`` on new jax, ``jax.experimental.shard_map`` on old.
+
+    ``check_vma=None`` means "the API's default" on new jax but disables the
+    old ``check_rep`` checker: it predates varying-axis marking (``pcast``)
+    and rejects valid programs whose replication only becomes provable
+    through collectives (scan carries, all_to_all round-trips).
+    """
+    if _shard_map_new is not None:
+        kw = {} if check_vma is None else {"check_vma": check_vma}
+        return _shard_map_new(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, **kw)
+    return _shard_map_old(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs,
+                          check_rep=bool(check_vma) if check_vma is not None
+                          else False)

@@ -4,6 +4,7 @@ Public API:
   Predicate, pack, OP_*            — predicate algebra (CNF via ``group``)
   OrderingConfig, OrderState       — Table-1 parameters + adaptive state
   AdaptiveFilter, AdaptiveFilterConfig, static_filter — the operator
+  ShardedAdaptiveFilter            — the operator under shard_map (data mesh)
   Scope                            — per_batch / per_shard / centralized
   engine (get_engine/register)     — pluggable execution backends
 """
@@ -17,10 +18,13 @@ from repro.core.predicates import (OP_BETWEEN, OP_EQ, OP_GT, OP_HASHMIX,
                                    OP_LT, Predicate, PredicateSpecs, pack,
                                    paper_filters_4, paper_filters_cnf)
 from repro.core.scope import Scope
+from repro.core.sharded import (ShardedAdaptiveFilter, shard_slice,
+                                stack_states)
 from repro.core.stats import FilterStats
 
 __all__ = [
     "AdaptiveFilter", "AdaptiveFilterConfig", "StepMetrics", "static_filter",
+    "ShardedAdaptiveFilter", "shard_slice", "stack_states",
     "ChainResult", "FilterEngine", "MonitorSpec", "available_engines",
     "get_engine",
     "OrderingConfig", "OrderState", "init_order_state",

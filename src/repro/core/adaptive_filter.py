@@ -47,7 +47,12 @@ class AdaptiveFilterConfig:
     cost_mode: str = "static"
     backend: str = "jnp"
     adaptive: bool = True
+    # Device-side survivor compaction: ``step_compact`` gathers survivors
+    # into a padded fixed-width [C, compact_capacity] buffer + count on
+    # device (``filter_exec.compact_fixed``), so downstream stages never
+    # host-boolean-index the batch. capacity None → batch width (lossless).
     compact_output: bool = False
+    compact_capacity: int | None = None
 
     def __post_init__(self) -> None:
         scope_from_str(self.scope)
@@ -59,6 +64,16 @@ class AdaptiveFilterConfig:
                 f"{engine_lib.available_engines()}")
         if self.cost_mode == "measured" and self.backend != "numpy":
             raise ValueError("measured cost mode needs the host (numpy) backend")
+        if self.compact_output and not get_engine(self.backend).traceable:
+            raise ValueError(
+                "compact_output is the device-side gather; the host "
+                f"engine {self.backend!r} already emits compacted rows "
+                "(boolean-index short-circuit) — drop the flag")
+        if self.compact_capacity is not None:
+            if not self.compact_output:
+                raise ValueError("compact_capacity needs compact_output=True")
+            if self.compact_capacity < 1:
+                raise ValueError("compact_capacity must be >= 1")
 
 
 class StepMetrics(NamedTuple):
@@ -89,6 +104,7 @@ class AdaptiveFilter:
         self._step_engine = self._engine if self._engine.traceable \
             else get_engine("jnp")
         self._jit_step = None
+        self._jit_step_compact = None
 
     # ---------------------------------------------------------------- state
     def init_state(self, xp=jnp) -> OrderState:
@@ -101,6 +117,13 @@ class AdaptiveFilter:
         if self._jit_step is None:
             self._jit_step = jax.jit(self.step)
         return self._jit_step
+
+    @property
+    def jit_step_compact(self):
+        """``jax.jit(self.step_compact)``, compiled once and reused."""
+        if self._jit_step_compact is None:
+            self._jit_step_compact = jax.jit(self.step_compact)
+        return self._jit_step_compact
 
     # ----------------------------------------------------------- jit'd step
     def step(self, state: OrderState, columns: jnp.ndarray,
@@ -124,7 +147,13 @@ class AdaptiveFilter:
 
         if cfg.adaptive:
             if self._scope is Scope.PER_BATCH:
-                state = self.init_state()
+                # per-task analogue: evidence dies with the batch — but the
+                # monitor lane's stride and the re-rank counter are *stream*
+                # properties, not evidence. Resetting sample_phase too would
+                # make every batch sample the same row offsets (correlation
+                # bias the deterministic stride exists to avoid).
+                state = self.init_state()._replace(
+                    sample_phase=state.sample_phase, epoch=state.epoch)
             cut, gcut, n_mon = (res.cut_counts, res.group_cut_counts,
                                 res.n_monitored)
             if self._scope is Scope.CENTRALIZED and self.axis_names:
@@ -153,6 +182,21 @@ class AdaptiveFilter:
         )
         return new_state, res.mask, metrics
 
+    def step_compact(self, state: OrderState, columns: jnp.ndarray,
+                     measured_costs: jnp.ndarray | None = None):
+        """``step`` + device-side survivor compaction (``compact_output``).
+
+        Returns (new_state, packed f32[C, cap], n_kept i32[], mask bool[R],
+        metrics). ``packed[:, :n_kept]`` is bit-identical to the host
+        boolean-mask path ``columns[:, mask]`` (up to padding) but never
+        leaves the device unpacked. jit/shard_map-compatible.
+        """
+        from repro.core import filter_exec
+        state, mask, metrics = self.step(state, columns, measured_costs)
+        cap = self.config.compact_capacity or int(columns.shape[1])
+        packed, n_kept = filter_exec.compact_fixed(columns, mask, cap)
+        return state, packed, n_kept, mask, metrics
+
     # ------------------------------------------------------- host streaming
     def process_stream(self, batches: Iterable[np.ndarray]
                        ) -> Iterator[tuple[np.ndarray, np.ndarray, dict]]:
@@ -169,9 +213,17 @@ class AdaptiveFilter:
         state = self.init_state()
         for batch in batches:
             cols = jnp.asarray(batch, jnp.float32)
-            state, mask, metrics = self.jit_step(state, cols)
+            if self.config.compact_output:
+                state, packed, n_kept, mask, metrics = self.jit_step_compact(
+                    state, cols)
+                survivors = np.asarray(packed)[:, :int(n_kept)]
+            else:
+                state, mask, metrics = self.jit_step(state, cols)
+                survivors = None
             mask_np = np.asarray(mask)
-            yield batch[:, mask_np], mask_np, {
+            if survivors is None:
+                survivors = batch[:, mask_np]
+            yield survivors, mask_np, {
                 "work_units": float(metrics.work_units),
                 "n_pass": int(metrics.n_pass),
                 "perm": np.asarray(metrics.perm).tolist(),

@@ -39,7 +39,7 @@ from repro.core.engine.base import ChainResult
 from repro.core.predicates import PredicateSpecs
 
 __all__ = ["ChainResult", "monitor_indices", "run_monitor", "run_chain",
-           "compact"]
+           "compact", "compact_fixed"]
 
 
 def monitor_indices(n_rows: int, collect_rate: int, sample_phase):
@@ -150,3 +150,30 @@ def compact(columns: jnp.ndarray, mask: jnp.ndarray, fill: float = 0.0):
     out = jnp.full((columns.shape[0], n_rows + 1), fill, columns.dtype)
     out = out.at[:, dest].set(columns)
     return out[:, :n_rows], jnp.sum(mask.astype(jnp.int32))
+
+
+def compact_fixed(columns: jnp.ndarray, mask: jnp.ndarray, capacity: int,
+                  fill: float = 0.0):
+    """Fixed-capacity device-side compaction: mask → indices → padded gather.
+
+    Returns (packed f32[C, capacity], n_kept i32[]). Survivors keep their
+    stream order in the first ``n_kept`` slots; the tail is ``fill``. Unlike
+    ``compact`` the output width is a static ``capacity`` independent of the
+    batch width, so survivors flow to downstream device stages — or a single
+    dense host copy — without ever round-tripping through a host boolean
+    index. Shared by every traceable engine: the engines produce the mask,
+    this gather consumes it (``AdaptiveFilter.step_compact``). Survivors
+    beyond ``capacity`` are dropped and ``n_kept`` saturates — size capacity
+    from the stream's expected pass rate (capacity = batch width is always
+    lossless).
+    """
+    if capacity < 1:
+        raise ValueError("capacity must be >= 1")
+    keep = jnp.logical_not(mask)
+    order = jnp.argsort(keep, stable=True)        # survivors first, in order
+    slots = jnp.arange(capacity, dtype=jnp.int32)
+    idx = jnp.take(order, slots, mode="fill", fill_value=0)
+    n_pass = jnp.sum(mask.astype(jnp.int32))
+    valid = slots < n_pass
+    packed = jnp.where(valid[None, :], columns[:, idx], fill)
+    return packed, jnp.minimum(n_pass, capacity)

@@ -12,14 +12,23 @@ Mapping here: an "executor" is one data shard of the ingestion pipeline (one
 host process, or one mesh data-row when the filter runs jitted under
 ``shard_map``). A "task" is one micro-batch step.
 
-  PER_BATCH    — reset OrderState every step (per-task analogue).
+  PER_BATCH    — reset the epoch evidence every step (per-task analogue);
+                 the monitor stride and the re-rank counter persist — they
+                 are stream properties, not evidence.
   PER_SHARD    — default; state persists per shard, NO collectives: the
-                 lowered HLO of the filter step contains no all-reduce
-                 (asserted by tests/test_scope.py), matching the paper's "no
-                 data transferred through the network".
-  CENTRALIZED  — epoch statistics are psum-merged across the given mesh axes
-                 before ranks are computed, so every shard adopts the global
-                 order; costs one small (2P+1 floats) all-reduce per epoch.
+                 lowered HLO of the sharded filter step contains no
+                 all-reduce (asserted by tests/test_sharded_filter.py),
+                 matching the paper's "no data transferred through the
+                 network".
+  CENTRALIZED  — batch monitor counters are psum-merged across the given
+                 mesh axes before they fold into the epoch accumulators, so
+                 every shard accumulates identical global statistics and
+                 adopts the global order at each epoch boundary; costs one
+                 small (2P+G+1 floats) all-reduce per step. Deferring the
+                 exchange to epoch boundaries is a ROADMAP open item.
+
+``core.sharded.ShardedAdaptiveFilter`` is the execution layer that runs all
+three under real ``shard_map``.
 """
 
 from __future__ import annotations

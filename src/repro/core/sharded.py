@@ -1,0 +1,162 @@
+"""Sharded execution layer: the adaptive filter under ``jax.shard_map``.
+
+This is where the paper's central design decision (§2.2 — *where does the
+adaptive metadata live?*) becomes executable instead of descriptive. One
+``ShardedAdaptiveFilter`` runs the single-shard ``AdaptiveFilter.step``
+under ``shard_map`` over a data mesh axis; the ``OrderState`` pytree gains
+a leading shard axis (one per-executor state per mesh row) and the scope
+policy decides what crosses the network:
+
+  PER_SHARD    — the paper's choice: every shard adapts to its own slice,
+                 zero collectives. The lowered HLO of the step contains NO
+                 all-reduce (pinned by tests/test_sharded_filter.py), the
+                 machine-checkable analogue of "no data transferred through
+                 the network". Shards diverge under heterogeneous drift —
+                 which is the feature, not a bug.
+  CENTRALIZED  — the driver-state alternative the paper rejects for
+                 contention: batch monitor counters are psum-merged across
+                 the axis (``scope.reduce_stats``) before they fold into the
+                 epoch accumulators, so every shard accumulates identical
+                 global statistics and adopts the identical global order at
+                 every epoch boundary. Costs one small (2P+G+1 floats)
+                 all-reduce per step; deferring it to epoch boundaries is a
+                 ROADMAP open item.
+  PER_BATCH    — the per-task strawman: evidence dies with each batch on
+                 each shard (monitor stride and epoch counter persist).
+
+Data contract: ``columns`` is f32[C, S·R] with shard i owning the
+contiguous row block [i·R, (i+1)·R) — exactly what ``in_specs=P(None,
+"data")`` hands each mesh row, and what ``data.pipeline.ShardedPipeline``
+assembles from per-shard ``LogStream``s. Epochs fire per *local* rows
+(``calculate_rate`` rows per shard, as per-executor counters do in Spark);
+under CENTRALIZED all shards fire in lockstep because every shard sees the
+same batch shape.
+
+With ``compact_output`` the per-shard survivors additionally come back as a
+padded on-device [S, C, cap] gather + counts (``filter_exec.compact_fixed``
+applied inside the shard_map body), so a multi-shard ingestion step moves
+exactly one dense buffer per shard to the host — never a boolean index.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.compat import shard_map
+from repro.core.adaptive_filter import AdaptiveFilter, AdaptiveFilterConfig
+from repro.core.ordering import OrderState
+from repro.core.predicates import Predicate
+
+
+def stack_states(state: OrderState, num_shards: int) -> OrderState:
+    """Replicate one OrderState onto a leading shard axis: leaf → [S, ...]."""
+    return jax.tree.map(
+        lambda x: jnp.tile(x[None], (num_shards,) + (1,) * x.ndim), state)
+
+
+def shard_slice(state: OrderState, shard: int) -> OrderState:
+    """Extract shard ``shard``'s OrderState from the stacked pytree."""
+    return jax.tree.map(lambda x: x[shard], state)
+
+
+class ShardedAdaptiveFilter:
+    """Data-parallel adaptive CNF filter: one OrderState per mesh shard.
+
+    ``mesh`` defaults to a 1-axis mesh over every visible device. All three
+    scopes of ``AdaptiveFilterConfig.scope`` are honoured as described in
+    the module docstring; the backend must be a traceable engine (jnp /
+    pallas) — host engines cannot run under shard_map.
+    """
+
+    def __init__(self, predicates: Sequence[Predicate],
+                 config: AdaptiveFilterConfig | None = None,
+                 *, mesh: jax.sharding.Mesh | None = None,
+                 axis_name: str = "data"):
+        cfg = config or AdaptiveFilterConfig()
+        self.inner = AdaptiveFilter(predicates, cfg, axis_names=(axis_name,))
+        if not self.inner._engine.traceable:
+            raise ValueError(
+                f"backend {cfg.backend!r} is a host engine; the sharded "
+                "filter needs a traceable engine (jnp / pallas)")
+        if mesh is None:
+            mesh = jax.make_mesh((jax.device_count(),), (axis_name,))
+        if axis_name not in mesh.axis_names:
+            raise ValueError(f"mesh has no axis {axis_name!r}: "
+                             f"{mesh.axis_names}")
+        self.config = cfg
+        self.mesh = mesh
+        self.axis_name = axis_name
+        self.num_shards = int(mesh.shape[axis_name])
+        self._jit_step = None
+        self._jit_step_compact = None
+
+    # ---------------------------------------------------------------- state
+    def init_state(self) -> OrderState:
+        """Stacked per-shard state: every leaf leads with the shard axis."""
+        return stack_states(self.inner.init_state(), self.num_shards)
+
+    # ----------------------------------------------------------------- step
+    def _specs(self, n_out: int):
+        a = self.axis_name
+        return ((P(a), P(None, a)), (P(a),) * n_out)
+
+    def sharded_step(self, state: OrderState, columns: jnp.ndarray):
+        """One micro-batch on every shard: columns f32[C, S·R], row-sharded.
+
+        Returns (new_state [S, ...], mask bool[S·R], metrics with leading
+        shard axis on every field). Trace it with ``jax.jit`` (or use
+        ``jit_step``) — shard_map placement only happens under jit.
+        """
+
+        def local(st, cols):
+            st = shard_slice(st, 0)       # [1, ...] per-shard block → [...]
+            new_st, mask, metrics = self.inner.step(st, cols)
+            return (jax.tree.map(lambda x: x[None], new_st), mask,
+                    jax.tree.map(lambda x: x[None], metrics))
+
+        in_specs, out_specs = self._specs(3)
+        return shard_map(local, mesh=self.mesh, in_specs=in_specs,
+                         out_specs=out_specs)(state, columns)
+
+    def sharded_step_compact(self, state: OrderState, columns: jnp.ndarray):
+        """``sharded_step`` + per-shard device-side compaction.
+
+        Returns (new_state, packed f32[S, C, cap], n_kept i32[S],
+        mask bool[S·R], metrics). ``packed[i, :, :n_kept[i]]`` equals shard
+        i's host boolean-mask survivors bit-exactly.
+        """
+
+        def local(st, cols):
+            st = shard_slice(st, 0)
+            new_st, packed, n_kept, mask, metrics = self.inner.step_compact(
+                st, cols)
+            return (jax.tree.map(lambda x: x[None], new_st), packed[None],
+                    n_kept[None], mask, jax.tree.map(lambda x: x[None],
+                                                     metrics))
+
+        in_specs, out_specs = self._specs(5)
+        return shard_map(local, mesh=self.mesh, in_specs=in_specs,
+                         out_specs=out_specs)(state, columns)
+
+    @property
+    def jit_step(self):
+        if self._jit_step is None:
+            self._jit_step = jax.jit(self.sharded_step)
+        return self._jit_step
+
+    @property
+    def jit_step_compact(self):
+        if self._jit_step_compact is None:
+            self._jit_step_compact = jax.jit(self.sharded_step_compact)
+        return self._jit_step_compact
+
+    # ------------------------------------------------------------- analysis
+    def compiled_text(self, state: OrderState, columns: jnp.ndarray) -> str:
+        """Compiled HLO of one sharded step — what the collective-freedom
+        assertion (PER_SHARD ⇒ no all-reduce/all-gather) greps."""
+        return jax.jit(self.sharded_step).lower(
+            state, columns).compile().as_text()

@@ -6,23 +6,76 @@ the filter stage is an ``AdaptiveFilter`` (or a static one — drop-in), its
 restarts, per DESIGN §6), and every host/shard runs its own instance — the
 paper's per-executor scope by construction.
 
-Emits fixed-shape LM batches {"tokens": i32[B, S], "labels": i32[B, S]}
-ready for ``train_step``. Deterministic given (seed, cursor): the
-fault-tolerance test restarts mid-stream and checks the batch sequence is
-bit-identical.
+Two deployment shapes:
+
+  ``Pipeline``        — one stream, one filter instance (one host process =
+                        one executor; run N processes for N executors).
+  ``ShardedPipeline`` — one process drives a whole data mesh: S per-shard
+                        ``LogStream``s feed ONE ``ShardedAdaptiveFilter``
+                        step per iteration (shard_map over the mesh's data
+                        axis, per-shard OrderState, scope-controlled stat
+                        exchange — see ``core.sharded``).
+
+Both emit fixed-shape LM batches {"tokens": i32[B, S], "labels": i32[B, S]}
+ready for ``train_step``, checkpoint/restore bit-identically (the
+fault-tolerance tests restart mid-stream and compare batch sequences), and
+honour ``compact_output``: survivors then arrive as padded on-device
+buffers + counts and the host never boolean-indexes a batch.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator
+from typing import Iterator, Sequence
 
-import jax
 import numpy as np
 
 from repro.core.adaptive_filter import AdaptiveFilter
+from repro.core.sharded import ShardedAdaptiveFilter
 from repro.data import tokenizer
 from repro.data.stream import LogStream
+
+
+def fstate_to_arrays(fstate) -> dict:
+    """OrderState → flat dict of numpy arrays (checkpoint encoding).
+
+    Works for single [P]-shaped states and stacked [S, P] sharded states —
+    leaves are stored verbatim, stats fields under a ``stats.`` prefix.
+    """
+    return {k: np.asarray(v) for k, v in fstate._asdict().items()
+            if k != "stats"} \
+        | {f"stats.{k}": np.asarray(v) for k, v in
+           fstate.stats._asdict().items()}
+
+
+def fstate_from_arrays(fs: dict):
+    """Inverse of ``fstate_to_arrays`` (jnp leaves).
+
+    Pre-CNF checkpoints lack the group fields; for flat chains group_cut ≡
+    num_cut accumulators start at zero and group_perm is the identity, so
+    the defaults restore them losslessly (shape-generic: the identity is
+    broadcast over any leading shard axis).
+    """
+    import jax.numpy as jnp
+
+    from repro.core.ordering import OrderState
+    from repro.core.stats import FilterStats
+
+    adj = np.asarray(fs["adj_rank"])
+    n_groups = int(adj.shape[-1])
+    stats = FilterStats(jnp.asarray(fs["stats.num_cut"]),
+                        jnp.asarray(fs["stats.cost_acc"]),
+                        jnp.asarray(fs["stats.n_monitored"]),
+                        jnp.asarray(fs.get("stats.group_cut",
+                                           fs["stats.num_cut"])))
+    default_gperm = np.broadcast_to(
+        np.arange(n_groups, dtype=np.int32), adj.shape)
+    return OrderState(
+        perm=jnp.asarray(fs["perm"]), adj_rank=jnp.asarray(fs["adj_rank"]),
+        stats=stats, rows_into_epoch=jnp.asarray(fs["rows_into_epoch"]),
+        sample_phase=jnp.asarray(fs["sample_phase"]),
+        epoch=jnp.asarray(fs["epoch"]),
+        group_perm=jnp.asarray(fs.get("group_perm", default_gperm)))
 
 
 @dataclasses.dataclass
@@ -35,7 +88,27 @@ class PipelineState:
     rows_pass: int
 
 
-class Pipeline:
+class _LMBatchEmitter:
+    """Shared tokenize-buffer-emit tail of both pipelines.
+
+    Expects ``batch_size``, ``seq_len``, ``vocab_size``, ``tokens_per_row``,
+    ``_buffer``, and ``batches_emitted`` on self.
+    """
+
+    def _emit(self, survivors: np.ndarray) -> Iterator[dict]:
+        toks = tokenizer.rows_to_tokens(
+            survivors, self.vocab_size, self.tokens_per_row)
+        self._buffer = np.concatenate([self._buffer, toks])
+        need = self.batch_size * (self.seq_len + 1)
+        while self._buffer.size >= need:
+            chunk, self._buffer = self._buffer[:need], self._buffer[need:]
+            seq = chunk.reshape(self.batch_size, self.seq_len + 1)
+            self.batches_emitted += 1
+            yield {"tokens": seq[:, :-1].astype(np.int32),
+                   "labels": seq[:, 1:].astype(np.int32)}
+
+
+class Pipeline(_LMBatchEmitter):
     def __init__(self, stream: LogStream, filt: AdaptiveFilter,
                  batch_size: int, seq_len: int, vocab_size: int,
                  tokens_per_row: int = 8):
@@ -45,7 +118,9 @@ class Pipeline:
         self.seq_len = seq_len
         self.vocab_size = vocab_size
         self.tokens_per_row = tokens_per_row
-        self._jit_step = filt.jit_step        # compiled once per filter
+        self._compact = filt.config.compact_output
+        self._jit_step = filt.jit_step_compact if self._compact \
+            else filt.jit_step               # compiled once per filter
         self._fstate = filt.init_state()
         self._buffer = np.zeros((0,), np.int32)
         self.batches_emitted = 0
@@ -57,10 +132,7 @@ class Pipeline:
     def state(self) -> PipelineState:
         return PipelineState(
             stream_cursor=self.stream.cursor,
-            filter_state={k: np.asarray(v) for k, v in
-                          self._fstate._asdict().items() if k != "stats"}
-            | {f"stats.{k}": np.asarray(v) for k, v in
-               self._fstate.stats._asdict().items()},
+            filter_state=fstate_to_arrays(self._fstate),
             buffer=self._buffer.copy(),
             batches_emitted=self.batches_emitted,
             rows_in=self.rows_in,
@@ -68,55 +140,176 @@ class Pipeline:
         )
 
     def restore(self, st: PipelineState) -> None:
-        from repro.core.ordering import OrderState
-        from repro.core.stats import FilterStats
-        import jax.numpy as jnp
-
         self.stream.cursor = st.stream_cursor
-        fs = st.filter_state
-        # pre-CNF checkpoints lack the group fields; for flat chains
-        # group_cut ≡ num_cut accumulators start at zero and group_perm is
-        # the identity, so these defaults restore them losslessly
-        n_groups = int(np.asarray(fs["adj_rank"]).shape[0])
-        stats = FilterStats(jnp.asarray(fs["stats.num_cut"]),
-                            jnp.asarray(fs["stats.cost_acc"]),
-                            jnp.asarray(fs["stats.n_monitored"]),
-                            jnp.asarray(fs.get("stats.group_cut",
-                                               fs["stats.num_cut"])))
-        self._fstate = OrderState(
-            perm=jnp.asarray(fs["perm"]), adj_rank=jnp.asarray(fs["adj_rank"]),
-            stats=stats, rows_into_epoch=jnp.asarray(fs["rows_into_epoch"]),
-            sample_phase=jnp.asarray(fs["sample_phase"]),
-            epoch=jnp.asarray(fs["epoch"]),
-            group_perm=jnp.asarray(fs.get("group_perm",
-                                          np.arange(n_groups,
-                                                    dtype=np.int32))))
+        self._fstate = fstate_from_arrays(st.filter_state)
         self._buffer = st.buffer.copy()
         self.batches_emitted = st.batches_emitted
         self.rows_in = st.rows_in
         self.rows_pass = st.rows_pass
 
     # -------------------------------------------------------------- iteration
-    def __iter__(self) -> Iterator[dict]:
-        need = self.batch_size * (self.seq_len + 1)
-        for rb in self.stream:
-            self._fstate, mask, metrics = self._jit_step(
-                self._fstate, rb.columns)
+    def _filter_batch(self, columns: np.ndarray):
+        """Run one jitted filter step; returns (survivors f32[C,n], n_pass).
+
+        ``n_pass`` counts the survivors actually KEPT (and tokenized): under
+        a saturating ``compact_capacity`` that is ``n_kept``, not the mask
+        popcount — ``rows_pass`` must agree with the emitted token stream.
+        """
+        import jax.numpy as jnp
+
+        cols = jnp.asarray(columns, jnp.float32)
+        if self._compact:
+            self._fstate, packed, n_kept, _, metrics = self._jit_step(
+                self._fstate, cols)
+            survivors = np.asarray(packed)[:, :int(n_kept)]
+            n_pass = int(n_kept)
+        else:
+            self._fstate, mask, metrics = self._jit_step(self._fstate, cols)
             mask_np = np.asarray(mask)
-            survivors = rb.select(mask_np)
+            survivors = columns[:, mask_np]
+            n_pass = int(mask_np.sum())
+        self.last_metrics = {
+            "work_units": float(metrics.work_units),
+            "perm": np.asarray(metrics.perm).tolist(),
+            "epoch": int(metrics.epoch),
+        }
+        return survivors, n_pass
+
+    def __iter__(self) -> Iterator[dict]:
+        for rb in self.stream:
+            survivors, n_pass = self._filter_batch(rb.columns)
             self.rows_in += rb.n_rows
-            self.rows_pass += int(mask_np.sum())
-            self.last_metrics = {
-                "work_units": float(metrics.work_units),
-                "perm": np.asarray(metrics.perm).tolist(),
-                "epoch": int(metrics.epoch),
-            }
-            toks = tokenizer.rows_to_tokens(
-                survivors, self.vocab_size, self.tokens_per_row)
-            self._buffer = np.concatenate([self._buffer, toks])
-            while self._buffer.size >= need:
-                chunk, self._buffer = self._buffer[:need], self._buffer[need:]
-                seq = chunk.reshape(self.batch_size, self.seq_len + 1)
-                self.batches_emitted += 1
-                yield {"tokens": seq[:, :-1].astype(np.int32),
-                       "labels": seq[:, 1:].astype(np.int32)}
+            self.rows_pass += n_pass
+            yield from self._emit(survivors)
+
+
+# =============================================================== sharded
+@dataclasses.dataclass
+class ShardedPipelineState:
+    stream_cursors: list        # one LogStream cursor per shard
+    filter_state: dict          # stacked OrderState ([S, ...] leaves)
+    buffer: np.ndarray
+    batches_emitted: int
+    rows_in: int
+    rows_pass: int
+
+
+class ShardedPipeline(_LMBatchEmitter):
+    """Multi-shard ingestion: S per-shard streams → one shard_map step.
+
+    ``streams[i]`` must be the i-th round-robin partition of one logical
+    stream (``LogStream(shard_id=i, num_shards=S)``) — like Spark partitions
+    spread over executors. Each iteration pulls one batch per shard,
+    block-concatenates them into the [C, S·R] layout ``ShardedAdaptiveFilter``
+    expects (shard i owns rows [i·R, (i+1)·R)), runs ONE jitted sharded
+    step, and packs survivors shard-major into LM batches. The stacked
+    per-shard ``OrderState`` checkpoints/restores as a whole, so every
+    shard's adaptive ranks survive a restart.
+    """
+
+    def __init__(self, streams: Sequence[LogStream],
+                 filt: ShardedAdaptiveFilter, batch_size: int, seq_len: int,
+                 vocab_size: int, tokens_per_row: int = 8):
+        if len(streams) != filt.num_shards:
+            raise ValueError(
+                f"{len(streams)} streams for {filt.num_shards} shards")
+        self.streams = list(streams)
+        self.filt = filt
+        self.batch_size = batch_size
+        self.seq_len = seq_len
+        self.vocab_size = vocab_size
+        self.tokens_per_row = tokens_per_row
+        self._compact = filt.config.compact_output
+        self._jit_step = filt.jit_step_compact if self._compact \
+            else filt.jit_step
+        self._fstate = filt.init_state()
+        self._buffer = np.zeros((0,), np.int32)
+        self.batches_emitted = 0
+        self.rows_in = 0
+        self.rows_pass = 0
+        self.last_metrics: dict = {}
+
+    # ------------------------------------------------------------- checkpoint
+    def state(self) -> ShardedPipelineState:
+        return ShardedPipelineState(
+            stream_cursors=[s.cursor for s in self.streams],
+            filter_state=fstate_to_arrays(self._fstate),
+            buffer=self._buffer.copy(),
+            batches_emitted=self.batches_emitted,
+            rows_in=self.rows_in,
+            rows_pass=self.rows_pass,
+        )
+
+    def restore(self, st: ShardedPipelineState) -> None:
+        if len(st.stream_cursors) != len(self.streams):
+            raise ValueError(
+                f"checkpoint has {len(st.stream_cursors)} shard cursors, "
+                f"pipeline has {len(self.streams)} shards — elastic "
+                "OrderState reshard is not supported yet (see ROADMAP)")
+        for stream, cur in zip(self.streams, st.stream_cursors):
+            stream.cursor = int(cur)
+        self._fstate = fstate_from_arrays(st.filter_state)
+        self._buffer = st.buffer.copy()
+        self.batches_emitted = st.batches_emitted
+        self.rows_in = st.rows_in
+        self.rows_pass = st.rows_pass
+
+    # -------------------------------------------------------------- iteration
+    def _filter_block(self, columns: np.ndarray):
+        """One sharded step over the [C, S·R] block; survivors shard-major."""
+        import jax.numpy as jnp
+
+        n_shards = self.filt.num_shards
+        cols = jnp.asarray(columns, jnp.float32)
+        if self._compact:
+            self._fstate, packed, n_kept, mask, metrics = self._jit_step(
+                self._fstate, cols)
+            packed_np = np.asarray(packed)
+            counts = np.asarray(n_kept)
+            survivors = np.concatenate(
+                [packed_np[s][:, :int(counts[s])] for s in range(n_shards)],
+                axis=1)
+            n_pass = int(counts.sum())
+        else:
+            self._fstate, mask, metrics = self._jit_step(self._fstate, cols)
+            mask_np = np.asarray(mask)
+            survivors = columns[:, mask_np]
+            n_pass = int(mask_np.sum())
+        self.last_metrics = {
+            "work_units": float(np.asarray(metrics.work_units).sum()),
+            "perm": np.asarray(metrics.perm).tolist(),   # [S, P]
+            "epoch": int(np.asarray(metrics.epoch).max()),
+        }
+        return survivors, n_pass
+
+    def __iter__(self) -> Iterator[dict]:
+        iters = [iter(s) for s in self.streams]
+        while True:
+            rbs = []
+            for it in iters:
+                rb = next(it, None)
+                if rb is None:          # a shard ran dry → stream over
+                    return
+                rbs.append(rb)
+            cols = np.concatenate([rb.columns for rb in rbs], axis=1)
+            survivors, n_pass = self._filter_block(cols)
+            self.rows_in += cols.shape[1]
+            self.rows_pass += n_pass
+            yield from self._emit(survivors)
+
+
+def make_sharded_pipeline(filt: ShardedAdaptiveFilter, *, total_rows: int,
+                          batch_rows: int, batch_size: int, seq_len: int,
+                          vocab_size: int, seed: int = 0, drift=None,
+                          tokens_per_row: int = 8) -> ShardedPipeline:
+    """S round-robin partitions of one logical stream → ShardedPipeline."""
+    from repro.data.stream import DriftConfig
+
+    drift = drift or DriftConfig()
+    streams = [LogStream(total_rows=total_rows, batch_rows=batch_rows,
+                         seed=seed, drift=drift, shard_id=i,
+                         num_shards=filt.num_shards)
+               for i in range(filt.num_shards)]
+    return ShardedPipeline(streams, filt, batch_size=batch_size,
+                           seq_len=seq_len, vocab_size=vocab_size,
+                           tokens_per_row=tokens_per_row)

@@ -20,8 +20,9 @@ import numpy as np
 from repro.configs import ARCHS, get_config, get_smoke_config
 from repro.configs.paper_filters import DEFAULT as PAPER
 from repro.core import (AdaptiveFilter, AdaptiveFilterConfig, OrderingConfig,
-                        paper_filters_4, paper_filters_cnf)
-from repro.data.pipeline import Pipeline
+                        ShardedAdaptiveFilter, paper_filters_4,
+                        paper_filters_cnf)
+from repro.data.pipeline import Pipeline, make_sharded_pipeline
 from repro.data.stream import DriftConfig, LogStream
 from repro.launch.steps import make_train_step
 from repro.models.registry import build_model
@@ -32,9 +33,33 @@ from repro.runtime import FailureInjector, TrainDriver
 def build_pipeline(cfg, *, batch: int, seq: int, total_rows: int,
                    ordering: OrderingConfig, drift: DriftConfig,
                    shard_id: int = 0, num_shards: int = 1,
-                   chain: str = "flat") -> Pipeline:
+                   chain: str = "flat", filter_shards: int = 1,
+                   filter_scope: str = "per_shard",
+                   compact_output: bool = False):
+    """One ingestion pipeline.
+
+    ``filter_shards > 1`` runs the adaptive filter data-parallel under
+    shard_map: one OrderState per mesh shard, scope-controlled statistics
+    exchange (see ``repro.core.sharded``). Needs that many visible devices —
+    on a CPU host force them with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
+    """
     preds = (paper_filters_cnf if chain == "cnf" else paper_filters_4)("fig1")
-    filt = AdaptiveFilter(preds, AdaptiveFilterConfig(ordering=ordering))
+    fcfg = AdaptiveFilterConfig(ordering=ordering, scope=filter_scope,
+                                compact_output=compact_output)
+    if filter_shards > 1:
+        if filter_shards > jax.device_count():
+            raise SystemExit(
+                f"--filter-shards {filter_shards} > visible devices "
+                f"({jax.device_count()}); set XLA_FLAGS="
+                f"--xla_force_host_platform_device_count={filter_shards} "
+                "or run on a bigger mesh")
+        mesh = jax.make_mesh((filter_shards,), ("data",))
+        filt = ShardedAdaptiveFilter(preds, fcfg, mesh=mesh)
+        return make_sharded_pipeline(
+            filt, total_rows=total_rows, batch_rows=65536, drift=drift,
+            batch_size=batch, seq_len=seq, vocab_size=cfg.vocab)
+    filt = AdaptiveFilter(preds, fcfg)
     stream = LogStream(total_rows=total_rows, batch_rows=65536,
                        drift=drift, shard_id=shard_id, num_shards=num_shards)
     return Pipeline(stream, filt, batch_size=batch, seq_len=seq,
@@ -54,6 +79,18 @@ def main() -> None:
     ap.add_argument("--chain", choices=["flat", "cnf"], default="flat",
                     help="filter shape: the paper's conjunction or its "
                          "CNF (AND-of-OR) variant")
+    ap.add_argument("--filter-shards", type=int, default=1,
+                    help="run the adaptive filter data-parallel over this "
+                         "many mesh shards (shard_map; needs that many "
+                         "visible devices)")
+    ap.add_argument("--filter-scope",
+                    choices=["per_batch", "per_shard", "centralized"],
+                    default="per_shard",
+                    help="lifetime/locality of the adaptive metadata "
+                         "(paper §2.2)")
+    ap.add_argument("--compact-output", action="store_true",
+                    help="device-side survivor compaction (padded gather + "
+                         "count instead of a host boolean index)")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--resume", action="store_true")
@@ -75,7 +112,10 @@ def main() -> None:
                               momentum=PAPER.ordering.momentum)
     pipeline = build_pipeline(cfg, batch=args.batch, seq=args.seq,
                               total_rows=args.rows, ordering=ordering,
-                              drift=PAPER.drift, chain=args.chain)
+                              drift=PAPER.drift, chain=args.chain,
+                              filter_shards=args.filter_shards,
+                              filter_scope=args.filter_scope,
+                              compact_output=args.compact_output)
 
     driver = TrainDriver(step_fn=step_fn, pipeline=pipeline, params=params,
                          opt_state=opt_state, ckpt_dir=args.ckpt_dir,

@@ -8,8 +8,11 @@ parallelism) and the scatter/gather lower to cross-shard collectives; the
 shard_map all-to-all variant is evaluated in EXPERIMENTS §Perf.
 
 Routing: softmax → top-k, renormalized (DeepSeek-V3 style), plus the
-standard load-balance auxiliary loss. Over-capacity assignments drop (their
-combine weight zeroes), matching production capacity-factor semantics.
+standard load-balance auxiliary loss. The dense path is dropless (buffer
+capacity = token count, so outputs are batch-composition-independent — see
+``moe_ffn_dense``); the EP path keeps bounded per-rank capacity, where
+over-capacity assignments drop (their combine weight zeroes) to cap the
+all_to_all buffer sizes.
 """
 
 from __future__ import annotations
@@ -55,7 +58,21 @@ def moe_ffn(params, cfg, x):
 
 
 def moe_ffn_dense(params, cfg, x):
-    """Einsum/scatter dispatch (single-device & fallback path)."""
+    """Einsum/scatter dispatch (single-device & fallback path) — dropless.
+
+    The buffer capacity is the token count itself, so no assignment ever
+    drops and each token's output is a pure function of (token, weights).
+    That invariant is what makes serving correct: the same token produces
+    bit-identical results in a full-sequence train forward, a (T-1)-token
+    prefill, and a 1-token decode step. A token-count-scaled capacity
+    (``int(t·k/E·cf)+1``) breaks it two ways: the cap rounds differently per
+    call so prefill drops assignments the full forward keeps (stale KV
+    cache), and at decode t is so small the cap collapses to 1, dropping
+    live assignments outright. Both modeled MoE families are dropless in
+    production (DeepSeek-V3 drops no tokens; DBRX is dropless MegaBlocks).
+    Bounded-capacity semantics live on in ``moe_ffn_ep``, where capacity
+    bounds the all_to_all buffers — a real network constraint.
+    """
     e = cfg.moe
     b, s, d = x.shape
     t = b * s
@@ -74,8 +91,11 @@ def moe_ffn_dense(params, cfg, x):
     aux = e.n_experts * jnp.sum(f * jnp.mean(probs, axis=0)) \
         * e.router_aux_weight
 
-    # ---- capacity dispatch -------------------------------------------------
-    cap = int(t * e.top_k / e.n_experts * e.capacity_factor) + 1
+    # ---- dropless dispatch -------------------------------------------------
+    # top-k indices are distinct per token, so per-expert load ≤ t: a t-slot
+    # buffer can never overflow (costs k/E·cf× more slots than a capacity
+    # buffer — the price of batch-composition-independent outputs).
+    cap = t
     flat_e = top_i.reshape(-1)                                  # [T*k]
     flat_w = top_w.reshape(-1)
     flat_t = jnp.repeat(jnp.arange(t), e.top_k)
@@ -84,10 +104,8 @@ def moe_ffn_dense(params, cfg, x):
     onehot = jax.nn.one_hot(flat_e, e.n_experts, dtype=jnp.int32)  # [Tk, E]
     pos_in_e = jnp.cumsum(onehot, axis=0) - onehot                 # exclusive
     slot = jnp.sum(pos_in_e * onehot, axis=-1)                     # [Tk]
-    keep = slot < cap
-    slot = jnp.where(keep, slot, cap)                              # drop row
 
-    buf = jnp.zeros((e.n_experts, cap + 1, d), x.dtype)
+    buf = jnp.zeros((e.n_experts, cap, d), x.dtype)
     buf = buf.at[flat_e, slot].set(xf[flat_t])
 
     # ---- grouped expert FFN ------------------------------------------------
@@ -98,7 +116,7 @@ def moe_ffn_dense(params, cfg, x):
 
     # ---- combine -----------------------------------------------------------
     gathered = y_e[flat_e, slot]                                   # [Tk, D]
-    w = jnp.where(keep, flat_w, 0.0).astype(x.dtype)
+    w = flat_w.astype(x.dtype)
     y = jnp.sum((gathered * w[:, None]).reshape(t, e.top_k, d), axis=1)
 
     if e.n_shared:
@@ -126,6 +144,7 @@ def moe_ffn_ep(params, cfg, x, mesh):
     capacity dense path; equal in expectation).
     """
     from jax.sharding import PartitionSpec as P
+    from repro.compat import shard_map
     from repro.parallel import hints
 
     e = cfg.moe
@@ -213,7 +232,7 @@ def moe_ffn_ep(params, cfg, x, mesh):
     # y is replicated over the model axis by construction (each rank gets
     # its own tokens back from the reverse all_to_all) — the static VMA
     # checker can't see through the round-trip, hence check_vma=False.
-    y, aux = jax.shard_map(
+    y, aux = shard_map(
         local, mesh=mesh,
         in_specs=(P(dp, tp_axis, None), P(None, None),
                   P(tp_axis, None, None), P(tp_axis, None, None),

@@ -154,9 +154,10 @@ class TrainDriver:
 
 
 def _pipeline_state_to_json(pipeline) -> dict:
+    """Handles both ``Pipeline`` (one cursor) and ``ShardedPipeline`` (one
+    cursor per shard + stacked OrderState; the leaves serialize the same)."""
     st = pipeline.state()
-    return {
-        "stream_cursor": st.stream_cursor,
+    out = {
         "filter_state": {k: v.tolist() for k, v in st.filter_state.items()},
         "filter_dtypes": {k: str(v.dtype) for k, v in st.filter_state.items()},
         "buffer": st.buffer.tolist(),
@@ -164,14 +165,24 @@ def _pipeline_state_to_json(pipeline) -> dict:
         "rows_in": st.rows_in,
         "rows_pass": st.rows_pass,
     }
+    if hasattr(st, "stream_cursors"):
+        out["stream_cursors"] = [int(c) for c in st.stream_cursors]
+    else:
+        out["stream_cursor"] = st.stream_cursor
+    return out
 
 
 def _pipeline_state_from_json(pipeline, d: dict):
-    from repro.data.pipeline import PipelineState
+    from repro.data.pipeline import PipelineState, ShardedPipelineState
     fs = {k: np.asarray(v, dtype=d["filter_dtypes"][k])
           for k, v in d["filter_state"].items()}
-    pipeline.restore(PipelineState(
-        stream_cursor=d["stream_cursor"], filter_state=fs,
-        buffer=np.asarray(d["buffer"], np.int32),
-        batches_emitted=d["batches_emitted"], rows_in=d["rows_in"],
-        rows_pass=d["rows_pass"]))
+    common = dict(filter_state=fs,
+                  buffer=np.asarray(d["buffer"], np.int32),
+                  batches_emitted=d["batches_emitted"], rows_in=d["rows_in"],
+                  rows_pass=d["rows_pass"])
+    if "stream_cursors" in d:
+        pipeline.restore(ShardedPipelineState(
+            stream_cursors=list(d["stream_cursors"]), **common))
+    else:
+        pipeline.restore(PipelineState(
+            stream_cursor=d["stream_cursor"], **common))

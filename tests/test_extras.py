@@ -157,10 +157,10 @@ def test_prefill_decode_matches_full_forward(arch):
                                       jnp.asarray(t - 1))
     logits_dec = np.asarray(logits_dec.astype(jnp.float32))
 
-    # MoE archs: capacity is token-count-dependent (48-token prefill vs
-    # 1-token decode), so drop sets differ slightly — the standard
-    # train/serve MoE discrepancy. Dense/SSM paths stay at bf16-noise level.
-    tol = 0.5 if cfg.moe is not None else 0.15
+    # The dense MoE dispatch is dropless, so each token's MoE output is a
+    # pure function of the token — MoE archs match at the same bf16
+    # summation-order noise level as the dense/SSM paths.
+    tol = 0.15
     assert np.max(np.abs(logits_full - logits_dec)) < tol, arch
     np.testing.assert_array_equal(np.argmax(logits_full, -1),
                                   np.argmax(logits_dec, -1))

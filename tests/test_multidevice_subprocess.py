@@ -35,6 +35,7 @@ def test_per_shard_scope_has_no_collectives():
         import numpy as np
         from functools import partial
         from jax.sharding import PartitionSpec as P
+        from repro.compat import shard_map
         from repro.core import paper_filters_4, pack
         from repro.core.filter_exec import run_chain
         from repro.core.scope import Scope, reduce_stats
@@ -59,7 +60,7 @@ def test_per_shard_scope_has_no_collectives():
                                        (Scope.CENTRALIZED, True)):
             outs = (P(), P(), P()) if scope is Scope.CENTRALIZED \\
                 else (P("data"), P("data"), P("data"))
-            f = jax.jit(jax.shard_map(partial(step, scope=scope), mesh=mesh,
+            f = jax.jit(shard_map(partial(step, scope=scope), mesh=mesh,
                         in_specs=P(None, "data"), out_specs=outs))
             txt = f.lower(cols).compile().as_text()
             has = any(k in txt for k in
@@ -76,6 +77,7 @@ def test_sharded_filter_matches_single_device():
     out = run_py("""
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
+        from repro.compat import shard_map
         from repro.core import paper_filters_4, pack
         from repro.core.filter_exec import run_chain
         from repro.data.stream import gen_batch
@@ -93,7 +95,7 @@ def test_sharded_filter_matches_single_device():
             r = run_chain(c, specs, perm, collect_rate=1000,
                           sample_phase=phase)
             return r.mask, r.cut_counts[None], r.n_monitored[None]
-        f = jax.jit(jax.shard_map(shard_step, mesh=mesh,
+        f = jax.jit(shard_map(shard_step, mesh=mesh,
                     in_specs=P(None, "data"),
                     out_specs=(P("data"), P("data"), P("data"))))
         mask4, cut4, nmon4 = f(cols)
@@ -138,6 +140,7 @@ def test_compressed_psum_grad_allreduce():
         import jax, jax.numpy as jnp, numpy as np
         from functools import partial
         from jax.sharding import PartitionSpec as P
+        from repro.compat import shard_map
         from repro.parallel.compression import (compressed_psum,
             init_error_feedback, int8_decompress)
 
@@ -149,7 +152,7 @@ def test_compressed_psum_grad_allreduce():
                                      residual=jax.tree.map(jnp.zeros_like, gi))
             return out
         for scheme, tol in (("none", 1e-6), ("int8", 0.05), ("topk", None)):
-            f = jax.jit(jax.shard_map(partial(red, scheme=scheme), mesh=mesh,
+            f = jax.jit(shard_map(partial(red, scheme=scheme), mesh=mesh,
                         in_specs=P(), out_specs=P()))
             got = f(g)["w"]
             want = g["w"] * 4
