@@ -1,7 +1,13 @@
 """Roofline harness: renders EXPERIMENTS §Roofline from the dry-run
 artifacts (artifacts/dryrun/*.json). One row per (arch × shape × mesh):
 three terms in seconds, dominant bottleneck, MODEL_FLOPS/HLO_FLOPs ratio,
-and a one-line what-would-move-it-down note."""
+and a one-line what-would-move-it-down note.
+
+Also renders the INGESTION grid-step byte model (``filter_ingest_model``):
+per-tile HBM traffic of the fused filter kernel with in-kernel compaction
+versus the legacy kernel + argsort ``compact_fixed`` path, as a function of
+the stream pass-rate — the analytic companion to ``benchmarks/ingest.py``'s
+measured sweep."""
 
 from __future__ import annotations
 
@@ -9,6 +15,54 @@ import json
 import pathlib
 
 ART = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+def filter_ingest_model(*, n_cols: int = 4, tile: int = 2048,
+                        pass_rate: float = 0.25, dtype_bytes: int = 4,
+                        batch_rows: int = 65536) -> dict:
+    """Grid-step HBM byte model for the filter→compact ingestion pass.
+
+    chain-only        : C·T·B read + T mask write (the pre-compaction
+                        kernel — the chain is fused, one pass over HBM).
+    unfused (argsort) : chain-only PLUS the legacy ``compact_fixed``: an
+                        O(R log R) stable boolean argsort (≈ log2(R)
+                        key+index passes over the tile's 4-byte lanes),
+                        then a second FULL-WIDTH gather read of the
+                        columns and the cap-width packed write.
+    fused (in-kernel) : the tile is packed while resident in VMEM — the
+                        chain pass additionally writes the within-tile
+                        packed survivors (C·T·B) + one i32 count; the
+                        second (gather) launch then moves only SURVIVOR
+                        data — the per-tile prefix, rounded up to the
+                        128-lane copy quantum — at its exclusive offset.
+                        No sort runs anywhere, and the full-width columns
+                        are never read again. (The CPU interpret-mode
+                        stand-in moves whole tiles in launch 2; a Mosaic
+                        lowering DMAs the counted prefix via scalar
+                        prefetch, which is what this model charges.)
+    """
+    import math
+
+    col_bytes = n_cols * tile * dtype_bytes
+    mask_bytes = tile                                   # i8 mask lane
+    chain_only = col_bytes + mask_bytes
+    sort_passes = math.ceil(math.log2(max(batch_rows, 2)))
+    sort_bytes = 2 * tile * 4 * sort_passes             # key + index lanes
+    unfused = chain_only + sort_bytes + col_bytes + col_bytes
+    # survivor prefix, quantized to the 128-lane copy granule
+    p_quant = math.ceil(pass_rate * tile / 128) * 128 / tile
+    surv = p_quant * col_bytes
+    fused = (chain_only + col_bytes + 4) + (4 + surv + surv)
+    return {
+        "n_cols": n_cols, "tile": tile, "pass_rate": pass_rate,
+        "bytes_chain_only": chain_only,
+        "bytes_unfused_argsort": unfused,
+        "bytes_fused": fused,
+        "fused_traffic_ratio": fused / unfused,
+        "note": "fused removes the sort entirely and touches survivor "
+                "bytes only in launch 2; at low pass-rates the gather "
+                "launch is nearly free",
+    }
 
 _NOTES = {
     ("memory", "train"): "cut activation traffic: fused flash kernel, "
@@ -66,7 +120,21 @@ def render(rows: list[dict], *, csv: bool = True) -> list[str]:
     return out
 
 
+def render_ingest_model() -> list[str]:
+    out = ["# --- ingest grid-step byte model (fused vs kernel+argsort) ---"]
+    for p in (0.05, 0.25, 0.5, 1.0):
+        m = filter_ingest_model(pass_rate=p)
+        out.append(
+            f"ingest-model/p{p:g},{m['fused_traffic_ratio']:.4f},"
+            f"chain={m['bytes_chain_only']};"
+            f"unfused={m['bytes_unfused_argsort']:.0f};"
+            f"fused={m['bytes_fused']:.0f}")
+    return out
+
+
 def main() -> None:
+    for line in render_ingest_model():
+        print(line)
     for tag in ("", "opt"):
         rows = load(tag)
         if not rows:

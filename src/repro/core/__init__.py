@@ -5,7 +5,8 @@ Public API:
   OrderingConfig, OrderState       — Table-1 parameters + adaptive state
   AdaptiveFilter, AdaptiveFilterConfig, static_filter — the operator
   ShardedAdaptiveFilter            — the operator under shard_map (data mesh)
-  Scope                            — per_batch / per_shard / centralized
+  Scope, EXCHANGE_MODES            — per_batch / per_shard / centralized +
+                                     eager / deferred / deferred-async
   engine (get_engine/register)     — pluggable execution backends
 """
 
@@ -17,7 +18,7 @@ from repro.core.ordering import OrderingConfig, OrderState, init_order_state
 from repro.core.predicates import (OP_BETWEEN, OP_EQ, OP_GT, OP_HASHMIX,
                                    OP_LT, Predicate, PredicateSpecs, pack,
                                    paper_filters_4, paper_filters_cnf)
-from repro.core.scope import Scope
+from repro.core.scope import EXCHANGE_MODES, Scope
 from repro.core.sharded import (ShardedAdaptiveFilter, shard_slice,
                                 stack_states)
 from repro.core.stats import FilterStats
@@ -31,5 +32,5 @@ __all__ = [
     "OP_BETWEEN", "OP_EQ", "OP_GT", "OP_HASHMIX", "OP_LT",
     "Predicate", "PredicateSpecs", "pack", "paper_filters_4",
     "paper_filters_cnf",
-    "Scope", "FilterStats",
+    "Scope", "EXCHANGE_MODES", "FilterStats",
 ]

@@ -20,11 +20,20 @@ argument) — this module only wires them together:
                         inside jit) or "measured" (host clock per predicate
                         per batch over the monitor sample — the paper's
                         System.nanoTime, at epoch granularity).
+  cfg.exchange        → when CENTRALIZED: "eager" psum-merges monitor
+                        counters every step; "deferred" accumulates locally
+                        and issues ONE collective per ``calculate_rate``
+                        rows at the epoch boundary (``exchange_update``,
+                        driven by ``maybe_exchange``); "deferred-async"
+                        additionally folds the merged stats in one epoch
+                        LATE (the paper's deferred per-executor update,
+                        generalized to the mesh).
 """
 
 from __future__ import annotations
 
 import dataclasses
+import logging
 from typing import Iterable, Iterator, NamedTuple, Sequence
 
 import jax
@@ -36,8 +45,36 @@ from repro.core import ordering as ordering_lib
 from repro.core import predicates as pred_lib
 from repro.core.engine import MonitorSpec, get_engine
 from repro.core.ordering import OrderingConfig, OrderState
+from repro.core.scope import (EXCHANGE_MODES, Scope, reduce_stats,
+                              scope_from_str)
 from repro.core.predicates import Predicate
-from repro.core.scope import Scope, reduce_stats, scope_from_str
+from repro.core.stats import FilterStats
+
+log = logging.getLogger(__name__)
+
+CAPACITY_QUANTUM = 128   # auto capacities are multiples of this (VPU lanes)
+
+
+def drive_exchange(owner, state: OrderState) -> OrderState:
+    """Shared deferred-exchange driver (host side).
+
+    ``owner`` is an ``AdaptiveFilter`` or ``ShardedAdaptiveFilter`` — any
+    object with ``config.exchange``, ``exchange_due``, the two jitted
+    exchange callables, and a ``_pending_stats`` slot. One implementation so
+    the subtle deferred-async stash semantics (first boundary falls back to
+    the synchronous merge; stash is transient across restores) cannot drift
+    between the single and sharded drivers.
+    """
+    if not owner.exchange_due(state):
+        return state
+    if owner.config.exchange == "deferred-async" \
+            and owner._pending_stats is not None:
+        state, merged = owner.jit_exchange_with(state, owner._pending_stats)
+    else:
+        state, merged = owner.jit_exchange(state)
+    owner._pending_stats = merged \
+        if owner.config.exchange == "deferred-async" else None
+    return state
 
 
 @dataclasses.dataclass(frozen=True)
@@ -47,12 +84,23 @@ class AdaptiveFilterConfig:
     cost_mode: str = "static"
     backend: str = "jnp"
     adaptive: bool = True
-    # Device-side survivor compaction: ``step_compact`` gathers survivors
-    # into a padded fixed-width [C, compact_capacity] buffer + count on
-    # device (``filter_exec.compact_fixed``), so downstream stages never
-    # host-boolean-index the batch. capacity None → batch width (lossless).
+    # Device-side survivor compaction: ``step_compact`` packs survivors
+    # into a padded fixed-width [C, capacity] buffer + count entirely on
+    # device (fused in-kernel for pallas, O(R) cumsum scatter for jnp), so
+    # downstream stages never host-boolean-index the batch.
+    #   capacity None   → batch width (lossless)
+    #   capacity int    → fixed width (survivors beyond it are dropped and
+    #                     counted in ``StepMetrics.n_dropped``)
+    #   capacity "auto" → derived from the monitor lane's observed
+    #                     pass-rate × batch width × ``compact_slack``,
+    #                     re-quantized to a multiple of 128 at epoch
+    #                     boundaries (bounded jit-cache churn).
     compact_output: bool = False
-    compact_capacity: int | None = None
+    compact_capacity: int | str | None = None
+    compact_slack: float = 1.5
+    # Statistics exchange cadence for the CENTRALIZED scope (see module
+    # docstring): "eager" | "deferred" | "deferred-async".
+    exchange: str = "eager"
 
     def __post_init__(self) -> None:
         scope_from_str(self.scope)
@@ -72,16 +120,32 @@ class AdaptiveFilterConfig:
         if self.compact_capacity is not None:
             if not self.compact_output:
                 raise ValueError("compact_capacity needs compact_output=True")
-            if self.compact_capacity < 1:
+            if isinstance(self.compact_capacity, str):
+                if self.compact_capacity != "auto":
+                    raise ValueError(
+                        f"compact_capacity {self.compact_capacity!r}: pass "
+                        "an int, None (batch width), or 'auto'")
+            elif self.compact_capacity < 1:
                 raise ValueError("compact_capacity must be >= 1")
+        if self.compact_slack < 1.0:
+            raise ValueError("compact_slack must be >= 1.0 (headroom factor)")
+        if self.exchange not in EXCHANGE_MODES:
+            raise ValueError(
+                f"bad exchange {self.exchange!r}; pick from {EXCHANGE_MODES}")
+        if self.exchange != "eager" and self.scope != "centralized":
+            raise ValueError(
+                "deferred exchange only changes the CENTRALIZED scope's "
+                f"collective cadence; scope {self.scope!r} never exchanges "
+                "— drop the flag")
 
 
 class StepMetrics(NamedTuple):
     work_units: jnp.ndarray     # row-level cost-weighted work for this batch
-    n_pass: jnp.ndarray         # surviving rows
+    n_pass: jnp.ndarray         # surviving rows (mask popcount)
     perm: jnp.ndarray           # order used for this batch
     epoch: jnp.ndarray          # epochs completed so far
     adj_rank: jnp.ndarray       # current smoothed GROUP ranks
+    n_dropped: jnp.ndarray      # survivors lost to compact_capacity overflow
 
 
 class AdaptiveFilter:
@@ -105,6 +169,15 @@ class AdaptiveFilter:
             else get_engine("jnp")
         self._jit_step = None
         self._jit_step_compact = None
+        self._jit_exchange = None
+        self._jit_exchange_with = None
+        # deferred-async: merged stats from the previous boundary, applied
+        # one epoch late (host-held; transient across checkpoint restarts —
+        # the first post-restore boundary falls back to synchronous merge).
+        self._pending_stats: FilterStats | None = None
+        # auto-capacity: current quantized width + last epoch it was tuned
+        self._auto_cap: int | None = None
+        self._auto_cap_epoch = 0
 
     # ---------------------------------------------------------------- state
     def init_state(self, xp=jnp) -> OrderState:
@@ -120,12 +193,64 @@ class AdaptiveFilter:
 
     @property
     def jit_step_compact(self):
-        """``jax.jit(self.step_compact)``, compiled once and reused."""
+        """Jitted ``step_compact``; ``capacity`` is static (one compile per
+        distinct quantized width — auto mode changes it only at epoch
+        boundaries, in multiples of 128)."""
         if self._jit_step_compact is None:
-            self._jit_step_compact = jax.jit(self.step_compact)
+            self._jit_step_compact = jax.jit(
+                self.step_compact, static_argnames=("capacity",))
         return self._jit_step_compact
 
     # ----------------------------------------------------------- jit'd step
+    def _advance_state(self, state: OrderState, res, costs,
+                       n_rows: int) -> OrderState:
+        """Fold one batch's monitor evidence into the order state."""
+        cfg = self.config
+        if not cfg.adaptive:
+            return state._replace(
+                sample_phase=(state.sample_phase + n_rows)
+                % cfg.ordering.collect_rate)
+        if self._scope is Scope.PER_BATCH:
+            # per-task analogue: evidence dies with the batch — but the
+            # monitor lane's stride and the re-rank counter are *stream*
+            # properties, not evidence. Resetting sample_phase too would
+            # make every batch sample the same row offsets (correlation
+            # bias the deterministic stride exists to avoid).
+            state = self.init_state()._replace(
+                sample_phase=state.sample_phase, epoch=state.epoch)
+        cut, gcut, n_mon = (res.cut_counts, res.group_cut_counts,
+                            res.n_monitored)
+        deferred = self.exchange_deferred
+        if (self._scope is Scope.CENTRALIZED and self.axis_names
+                and not deferred):
+            merged = reduce_stats(
+                FilterStats(cut, costs, n_mon, gcut), self._scope,
+                self.axis_names)
+            cut, costs, n_mon, gcut = (merged.num_cut, merged.cost_acc,
+                                       merged.n_monitored, merged.group_cut)
+        return ordering_lib.advance(
+            state, cfg.ordering, cut, costs, n_mon, n_rows=n_rows,
+            group_cut=gcut, groups=self.groups, defer_epoch=deferred)
+
+    def _metrics(self, res, perm, new_state, n_dropped=None) -> StepMetrics:
+        return StepMetrics(
+            work_units=res.work_units,
+            n_pass=jnp.sum(res.mask.astype(jnp.int32)),
+            perm=perm,
+            epoch=new_state.epoch,
+            adj_rank=new_state.adj_rank,
+            n_dropped=jnp.zeros((), jnp.int32) if n_dropped is None
+            else n_dropped,
+        )
+
+    def _perm(self, state: OrderState):
+        return state.perm if self.config.adaptive else jnp.arange(
+            len(self.predicates), dtype=jnp.int32)
+
+    def _monitor_spec(self, state: OrderState) -> MonitorSpec:
+        return MonitorSpec(collect_rate=self.config.ordering.collect_rate,
+                           sample_phase=state.sample_phase)
+
     def step(self, state: OrderState, columns: jnp.ndarray,
              measured_costs: jnp.ndarray | None = None
              ) -> tuple[OrderState, jnp.ndarray, StepMetrics]:
@@ -134,68 +259,146 @@ class AdaptiveFilter:
         ``columns``: f32[C, R]. jit/shard_map-compatible for traceable
         engines. Returns (new_state, mask bool[R], metrics).
         """
-        cfg = self.config
-        perm = state.perm if cfg.adaptive else jnp.arange(
-            len(self.predicates), dtype=jnp.int32)
-
+        perm = self._perm(state)
         res = self._step_engine.run_chain(
-            columns, self.specs, perm,
-            MonitorSpec(collect_rate=cfg.ordering.collect_rate,
-                        sample_phase=state.sample_phase))
-
+            columns, self.specs, perm, self._monitor_spec(state))
         costs = res.monitor_cost if measured_costs is None else measured_costs
-
-        if cfg.adaptive:
-            if self._scope is Scope.PER_BATCH:
-                # per-task analogue: evidence dies with the batch — but the
-                # monitor lane's stride and the re-rank counter are *stream*
-                # properties, not evidence. Resetting sample_phase too would
-                # make every batch sample the same row offsets (correlation
-                # bias the deterministic stride exists to avoid).
-                state = self.init_state()._replace(
-                    sample_phase=state.sample_phase, epoch=state.epoch)
-            cut, gcut, n_mon = (res.cut_counts, res.group_cut_counts,
-                                res.n_monitored)
-            if self._scope is Scope.CENTRALIZED and self.axis_names:
-                from repro.core.stats import FilterStats
-                merged = reduce_stats(
-                    FilterStats(cut, costs, n_mon, gcut), self._scope,
-                    self.axis_names)
-                cut, costs, n_mon, gcut = (merged.num_cut, merged.cost_acc,
-                                           merged.n_monitored,
-                                           merged.group_cut)
-            new_state = ordering_lib.advance(
-                state, cfg.ordering, cut, costs, n_mon,
-                n_rows=int(columns.shape[1]),
-                group_cut=gcut, groups=self.groups)
-        else:
-            new_state = state._replace(
-                sample_phase=(state.sample_phase + columns.shape[1])
-                % cfg.ordering.collect_rate)
-
-        metrics = StepMetrics(
-            work_units=res.work_units,
-            n_pass=jnp.sum(res.mask.astype(jnp.int32)),
-            perm=perm,
-            epoch=new_state.epoch,
-            adj_rank=new_state.adj_rank,
-        )
-        return new_state, res.mask, metrics
+        new_state = self._advance_state(state, res, costs,
+                                        int(columns.shape[1]))
+        return new_state, res.mask, self._metrics(res, perm, new_state)
 
     def step_compact(self, state: OrderState, columns: jnp.ndarray,
-                     measured_costs: jnp.ndarray | None = None):
-        """``step`` + device-side survivor compaction (``compact_output``).
+                     measured_costs: jnp.ndarray | None = None,
+                     *, capacity: int | None = None):
+        """``step`` + single-pass device-side survivor compaction.
 
         Returns (new_state, packed f32[C, cap], n_kept i32[], mask bool[R],
         metrics). ``packed[:, :n_kept]`` is bit-identical to the host
         boolean-mask path ``columns[:, mask]`` (up to padding) but never
-        leaves the device unpacked. jit/shard_map-compatible.
+        leaves the device unpacked — and never takes a second full-width
+        pass over HBM: the pallas engine packs survivors in-kernel while
+        each tile is in VMEM, the jnp engine fuses an O(R) cumsum scatter
+        (no argsort). jit/shard_map-compatible; ``capacity`` must be static
+        under jit (``jit_step_compact`` handles that).
         """
-        from repro.core import filter_exec
-        state, mask, metrics = self.step(state, columns, measured_costs)
-        cap = self.config.compact_capacity or int(columns.shape[1])
-        packed, n_kept = filter_exec.compact_fixed(columns, mask, cap)
-        return state, packed, n_kept, mask, metrics
+        if capacity is None:
+            if self.config.compact_capacity == "auto":
+                # capacity=None bakes the width into the trace and the jit
+                # cache would never see later re-tunes — auto callers must
+                # thread resolve_capacity() per call (the pipelines do).
+                raise ValueError(
+                    "compact_capacity='auto' needs an explicit per-call "
+                    "capacity: pass capacity=filt.resolve_capacity(n_rows)")
+            capacity = self.resolve_capacity(int(columns.shape[1]))
+        cap = capacity
+        perm = self._perm(state)
+        res, packed, n_kept = self._step_engine.run_chain_compact(
+            columns, self.specs, perm, self._monitor_spec(state),
+            capacity=cap)
+        costs = res.monitor_cost if measured_costs is None else measured_costs
+        new_state = self._advance_state(state, res, costs,
+                                        int(columns.shape[1]))
+        n_pass = jnp.sum(res.mask.astype(jnp.int32))
+        metrics = self._metrics(res, perm, new_state,
+                                n_dropped=n_pass - n_kept)
+        return new_state, packed, n_kept, res.mask, metrics
+
+    # --------------------------------------------------- capacity auto-tune
+    def resolve_capacity(self, n_rows: int) -> int:
+        """Current compaction width for an ``n_rows``-wide batch."""
+        cap = self.config.compact_capacity
+        if cap is None:
+            return n_rows
+        if cap == "auto":
+            return min(self._auto_cap, n_rows) if self._auto_cap else n_rows
+        return int(cap)
+
+    def observe_for_capacity(self, evidence_state: OrderState,
+                             new_state: OrderState, n_rows: int) -> None:
+        """Host hook: re-derive the auto capacity at epoch boundaries.
+
+        ``evidence_state`` is the state whose ``stats`` still hold the
+        (almost) full epoch's monitor accumulators — i.e. the state BEFORE
+        the step/exchange that fired the boundary. Estimated pass-rate =
+        Π_g S_g over the exact per-group selectivities; correlation between
+        groups is absorbed by ``compact_slack``. No-op unless
+        ``compact_capacity="auto"`` and an epoch boundary was crossed.
+        """
+        if self.config.compact_capacity != "auto":
+            return
+        epoch = int(np.max(np.asarray(new_state.epoch)))
+        if epoch <= self._auto_cap_epoch:
+            return
+        self._auto_cap_epoch = epoch
+        stats = jax.tree.map(np.asarray, evidence_state.stats)
+        n_mon = np.maximum(np.asarray(stats.n_monitored, np.float64), 0.0)
+        if np.max(n_mon) <= 0.0:
+            return                      # no evidence — keep current width
+        gcut = np.asarray(stats.group_cut, np.float64)
+        sel = np.clip(1.0 - gcut / np.maximum(n_mon, 1.0)[..., None],
+                      0.0, 1.0)
+        pass_rate = float(np.max(np.prod(sel, axis=-1)))  # max over shards
+        want = pass_rate * n_rows * self.config.compact_slack
+        quant = int(np.ceil(want / CAPACITY_QUANTUM)) * CAPACITY_QUANTUM
+        self._auto_cap = int(np.clip(quant, CAPACITY_QUANTUM, n_rows))
+
+    # ------------------------------------------------------ deferred epochs
+    @property
+    def exchange_deferred(self) -> bool:
+        """True when epoch boundaries are driver-owned (deferred modes)."""
+        return (self.config.adaptive and self.config.exchange != "eager"
+                and self._scope is Scope.CENTRALIZED)
+
+    def exchange_due(self, state: OrderState) -> bool:
+        """Host-side boundary check for the deferred-exchange driver."""
+        if not self.exchange_deferred:
+            return False
+        rows = int(np.max(np.asarray(state.rows_into_epoch)))
+        return rows >= self.config.ordering.calculate_rate
+
+    def exchange_update(self, state: OrderState,
+                        use_stats: FilterStats | None = None
+                        ) -> tuple[OrderState, FilterStats]:
+        """One epoch boundary: merge stats across the mesh, re-rank.
+
+        The ONLY collective of the deferred CENTRALIZED mode lives here —
+        one psum of (2P + G + 1) floats per ``calculate_rate`` rows, issued
+        from a separate jitted call so the per-step module compiles with no
+        all-reduce at all. Returns (new_state, merged_stats); with
+        ``use_stats`` the re-rank consumes those (one-epoch-stale) stats
+        instead while the freshly merged ones are returned for the next
+        boundary (deferred-async).
+        """
+        merged = state.stats
+        if self.axis_names:
+            merged = reduce_stats(merged, Scope.CENTRALIZED, self.axis_names)
+        new_state = ordering_lib.boundary_update(
+            state, self.config.ordering, groups=self.groups,
+            stats_override=merged if use_stats is None else use_stats)
+        return new_state, merged
+
+    @property
+    def jit_exchange(self):
+        if self._jit_exchange is None:
+            self._jit_exchange = jax.jit(lambda s: self.exchange_update(s))
+        return self._jit_exchange
+
+    @property
+    def jit_exchange_with(self):
+        if self._jit_exchange_with is None:
+            self._jit_exchange_with = jax.jit(
+                lambda s, st: self.exchange_update(s, st))
+        return self._jit_exchange_with
+
+    def maybe_exchange(self, state: OrderState) -> OrderState:
+        """Drive the deferred epoch boundary if one is due (host helper).
+
+        Eager mode / off-boundary: returns ``state`` unchanged. In
+        "deferred-async" the merged stats are stashed and applied at the
+        NEXT boundary (first boundary degenerates to the synchronous
+        merge), overlapping the collective with an epoch of filter work.
+        """
+        return drive_exchange(self, state)
 
     # ------------------------------------------------------- host streaming
     def process_stream(self, batches: Iterable[np.ndarray]
@@ -204,7 +407,10 @@ class AdaptiveFilter:
 
         Yields (surviving_rows f32[C, n_pass], mask, metrics_dict) per batch.
         Uses the configured host engine when one is selected (row-exact wall
-        time, measured costs); otherwise calls the jitted step.
+        time, measured costs); otherwise calls the jitted step. Under
+        ``compact_output`` the survivors come back through the device-side
+        packed buffer; overflow (``n_dropped``) is surfaced in the metrics
+        dict and warned about once per offending batch.
         """
         if not self._engine.traceable:
             yield from self._process_stream_host(batches)
@@ -213,13 +419,24 @@ class AdaptiveFilter:
         state = self.init_state()
         for batch in batches:
             cols = jnp.asarray(batch, jnp.float32)
+            prev = state
+            n_dropped = 0
             if self.config.compact_output:
+                cap = self.resolve_capacity(int(cols.shape[1]))
                 state, packed, n_kept, mask, metrics = self.jit_step_compact(
-                    state, cols)
+                    state, cols, capacity=cap)
                 survivors = np.asarray(packed)[:, :int(n_kept)]
+                n_dropped = int(metrics.n_dropped)
+                if n_dropped:
+                    log.warning(
+                        "compaction overflow: %d survivors dropped "
+                        "(capacity %d); raise compact_capacity or use "
+                        "'auto'", n_dropped, cap)
             else:
                 state, mask, metrics = self.jit_step(state, cols)
                 survivors = None
+            state = self.maybe_exchange(state)
+            self.observe_for_capacity(prev, state, int(cols.shape[1]))
             mask_np = np.asarray(mask)
             if survivors is None:
                 survivors = batch[:, mask_np]
@@ -227,7 +444,8 @@ class AdaptiveFilter:
                 "work_units": float(metrics.work_units),
                 "n_pass": int(metrics.n_pass),
                 "perm": np.asarray(metrics.perm).tolist(),
-                "epoch": int(metrics.epoch),
+                "epoch": int(np.max(np.asarray(state.epoch))),
+                "n_dropped": n_dropped,
             }
 
     def _process_stream_host(self, batches):
@@ -236,6 +454,7 @@ class AdaptiveFilter:
         cfg = self.config
         n_preds = len(self.predicates)
         state = self.init_state(xp=np)
+        defer = self.exchange_deferred
         for batch in batches:
             perm = state.perm if cfg.adaptive else np.arange(n_preds)
             res = self._engine.run_chain(
@@ -248,7 +467,14 @@ class AdaptiveFilter:
                     state, cfg.ordering, res.cut_counts, res.monitor_cost,
                     res.n_monitored, n_rows=batch.shape[1],
                     group_cut=res.group_cut_counts, groups=self.groups,
-                    xp=np)
+                    xp=np, defer_epoch=defer)
+                if defer and state.rows_into_epoch >= \
+                        cfg.ordering.calculate_rate:
+                    # no mesh on the host path: the "exchange" is the
+                    # identity merge — the boundary cadence still matches
+                    # the deferred device path.
+                    state = ordering_lib.boundary_update(
+                        state, cfg.ordering, groups=self.groups, xp=np)
             else:
                 state = state._replace(
                     sample_phase=(state.sample_phase + batch.shape[1])
@@ -258,6 +484,7 @@ class AdaptiveFilter:
                 "n_pass": int(res.mask.sum()),
                 "perm": [int(i) for i in perm],
                 "epoch": int(state.epoch),
+                "n_dropped": 0,
             }
 
 

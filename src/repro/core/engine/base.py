@@ -52,3 +52,17 @@ class FilterEngine(Protocol):
                   monitor: MonitorSpec) -> ChainResult:
         """Evaluate the CNF chain in ``perm`` order + run the monitor lane."""
         ...
+
+    def run_chain_compact(self, columns, specs, perm, monitor: MonitorSpec,
+                          *, capacity: int, fill: float = 0.0):
+        """``run_chain`` + fixed-capacity survivor compaction in one pass.
+
+        Returns (ChainResult, packed f32[C, capacity], n_kept i32[]).
+        Traceable engines must implement this so ``step_compact`` never
+        needs a second full-width pass over the batch: the jnp engine
+        chains the O(R) cumsum scatter onto its masked evaluation (XLA
+        fuses them), the pallas engine packs survivors in-kernel while the
+        tile is still in VMEM. Host engines may omit it — their
+        boolean-index short-circuit already emits compacted rows.
+        """
+        ...

@@ -19,3 +19,11 @@ class JnpEngine:
             columns, specs, perm,
             collect_rate=monitor.collect_rate,
             sample_phase=monitor.sample_phase)
+
+    def run_chain_compact(self, columns, specs, perm, monitor: MonitorSpec,
+                          *, capacity: int, fill: float = 0.0):
+        """Chain + O(R) cumsum compaction (no argsort); XLA fuses the two."""
+        res = self.run_chain(columns, specs, perm, monitor)
+        packed, n_kept = filter_exec.compact_fixed(columns, res.mask,
+                                                   capacity, fill)
+        return res, packed, n_kept

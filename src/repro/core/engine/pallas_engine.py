@@ -24,3 +24,16 @@ class PallasEngine:
             collect_rate=monitor.collect_rate,
             sample_phase=monitor.sample_phase,
             monitor_mode=monitor.mode)
+
+    def run_chain_compact(self, columns, specs, perm, monitor: MonitorSpec,
+                          *, capacity: int, fill: float = 0.0):
+        """Fused in-kernel compaction: survivors are packed per tile while
+        the tile is still in VMEM; a second launch stitches tiles at their
+        exclusive offsets (see ``kernels/filter_chain/filter_chain.py``)."""
+        from repro.kernels.filter_chain import ops as kernel_ops
+        return kernel_ops.filter_chain_compact(
+            columns, specs, perm,
+            collect_rate=monitor.collect_rate,
+            sample_phase=monitor.sample_phase,
+            capacity=capacity, fill=fill,
+            monitor_mode=monitor.mode)

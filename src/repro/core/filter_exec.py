@@ -39,7 +39,7 @@ from repro.core.engine.base import ChainResult
 from repro.core.predicates import PredicateSpecs
 
 __all__ = ["ChainResult", "monitor_indices", "run_monitor", "run_chain",
-           "compact", "compact_fixed"]
+           "compact", "compact_fixed", "compact_fixed_argsort"]
 
 
 def monitor_indices(n_rows: int, collect_rate: int, sample_phase):
@@ -154,7 +154,8 @@ def compact(columns: jnp.ndarray, mask: jnp.ndarray, fill: float = 0.0):
 
 def compact_fixed(columns: jnp.ndarray, mask: jnp.ndarray, capacity: int,
                   fill: float = 0.0):
-    """Fixed-capacity device-side compaction: mask → indices → padded gather.
+    """Fixed-capacity device-side compaction: mask → cumsum positions → O(R)
+    scatter.
 
     Returns (packed f32[C, capacity], n_kept i32[]). Survivors keep their
     stream order in the first ``n_kept`` slots; the tail is ``fill``. Unlike
@@ -165,7 +166,33 @@ def compact_fixed(columns: jnp.ndarray, mask: jnp.ndarray, capacity: int,
     this gather consumes it (``AdaptiveFilter.step_compact``). Survivors
     beyond ``capacity`` are dropped and ``n_kept`` saturates — size capacity
     from the stream's expected pass rate (capacity = batch width is always
-    lossless).
+    lossless; ``compact_capacity="auto"`` tracks the monitor lane's
+    pass-rate).
+
+    Each survivor's destination slot is its exclusive rank in the mask
+    (cumsum − 1) — the same position math the fused Pallas kernel computes
+    per tile — so there is no ``O(R log R)`` sort anywhere in the ingestion
+    path. Non-survivors and overflow survivors scatter into a dump column
+    that is sliced off, keeping the scatter index map free of duplicates on
+    the live region.
+    """
+    if capacity < 1:
+        raise ValueError("capacity must be >= 1")
+    pos = jnp.cumsum(mask.astype(jnp.int32)) - 1   # exclusive survivor rank
+    dest = jnp.where(jnp.logical_and(mask, pos < capacity), pos, capacity)
+    out = jnp.full((columns.shape[0], capacity + 1), fill, columns.dtype)
+    out = out.at[:, dest].set(columns, mode="drop")
+    n_pass = jnp.sum(mask.astype(jnp.int32))
+    return out[:, :capacity], jnp.minimum(n_pass, capacity)
+
+
+def compact_fixed_argsort(columns: jnp.ndarray, mask: jnp.ndarray,
+                          capacity: int, fill: float = 0.0):
+    """Legacy ``O(R log R)`` compaction (mask → stable argsort → gather).
+
+    Kept only as the baseline for ``benchmarks/ingest.py`` and the parity
+    tests — production paths use the ``O(R)`` cumsum scatter above. Output
+    is bit-identical to ``compact_fixed``.
     """
     if capacity < 1:
         raise ValueError("capacity must be >= 1")

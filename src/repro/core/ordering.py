@@ -150,7 +150,7 @@ def epoch_update(state: OrderState, cfg: OrderingConfig,
 def advance(state: OrderState, cfg: OrderingConfig,
             cut_counts, costs, n_monitored, n_rows: int,
             group_cut=None, groups: tuple | None = None,
-            xp=jnp) -> OrderState:
+            xp=jnp, defer_epoch: bool = False) -> OrderState:
     """Fold one batch's monitor results in; fire the epoch boundary if crossed.
 
     Epoch boundaries are honored at batch granularity (a batch is the unit of
@@ -158,6 +158,12 @@ def advance(state: OrderState, cfg: OrderingConfig,
     the paper's behavior. ``n_rows`` must be a static python int (batch
     shape), so the modulo bookkeeping stays in int32 regardless of stream
     length.
+
+    ``defer_epoch=True`` (static) accumulates evidence but NEVER fires the
+    boundary — the caller owns it (deferred epoch exchange: the driver calls
+    ``exchange_update`` once per ``calculate_rate`` rows, merging stats
+    across the mesh in ONE collective instead of one per step; the per-step
+    compiled module then contains no all-reduce at all).
     """
     new_stats = stats_lib.accumulate(state.stats, cut_counts, costs,
                                      n_monitored, group_cut=group_cut, xp=xp)
@@ -167,6 +173,8 @@ def advance(state: OrderState, cfg: OrderingConfig,
         rows_into_epoch=rows,
         sample_phase=(state.sample_phase + n_rows) % cfg.collect_rate,
     )
+    if defer_epoch:
+        return state
 
     def fire(s: OrderState) -> OrderState:
         updated = epoch_update(s, cfg, groups=groups, xp=xp)
@@ -177,3 +185,21 @@ def advance(state: OrderState, cfg: OrderingConfig,
         return jax.lax.cond(rows >= cfg.calculate_rate, fire, lambda s: s,
                             state)
     return fire(state) if rows >= cfg.calculate_rate else state
+
+
+def boundary_update(state: OrderState, cfg: OrderingConfig,
+                    groups: tuple | None = None, xp=jnp,
+                    stats_override: FilterStats | None = None) -> OrderState:
+    """Explicit epoch-boundary update for the deferred-exchange path.
+
+    Equivalent to the ``fire`` branch of ``advance`` — re-rank, reset
+    accumulators, keep the row overshoot — but driven by the caller instead
+    of the per-step conditional. ``stats_override`` substitutes the evidence
+    used for the re-rank (the psum-merged global stats under deferred
+    CENTRALIZED, or the one-epoch-stale merged stats under deferred-async).
+    """
+    if stats_override is not None:
+        state = state._replace(stats=stats_override)
+    updated = epoch_update(state, cfg, groups=groups, xp=xp)
+    return updated._replace(
+        rows_into_epoch=state.rows_into_epoch % cfg.calculate_rate)

@@ -20,15 +20,31 @@ host process, or one mesh data-row when the filter runs jitted under
                  all-reduce (asserted by tests/test_sharded_filter.py),
                  matching the paper's "no data transferred through the
                  network".
-  CENTRALIZED  — batch monitor counters are psum-merged across the given
-                 mesh axes before they fold into the epoch accumulators, so
-                 every shard accumulates identical global statistics and
-                 adopts the global order at each epoch boundary; costs one
-                 small (2P+G+1 floats) all-reduce per step. Deferring the
-                 exchange to epoch boundaries is a ROADMAP open item.
+  CENTRALIZED  — batch monitor counters are merged across the given mesh
+                 axes so every shard accumulates identical global statistics
+                 and adopts the global order at each epoch boundary. WHEN
+                 they merge is the ``AdaptiveFilterConfig.exchange`` policy:
+
+                   eager          — psum every step (one small 2P+G+1-float
+                                    all-reduce per micro-batch; the original
+                                    behaviour, still the default).
+                   deferred       — accumulate locally, psum ONCE per
+                                    ``calculate_rate`` rows at the epoch
+                                    boundary (``exchange_update``); the
+                                    per-step compiled module contains no
+                                    all-reduce at all (HLO-pinned). Sums are
+                                    associative, so the merged epoch totals
+                                    — and hence the adopted perm — are
+                                    IDENTICAL to eager's.
+                   deferred-async — same single boundary collective, but its
+                                    result is folded in one epoch LATE (the
+                                    paper's deferred per-executor update
+                                    generalized to the mesh), so the merge
+                                    can overlap the next epoch's filter
+                                    work.
 
 ``core.sharded.ShardedAdaptiveFilter`` is the execution layer that runs all
-three under real ``shard_map``.
+of it under real ``shard_map``.
 """
 
 from __future__ import annotations
@@ -46,6 +62,10 @@ class Scope(enum.Enum):
     PER_BATCH = "per_batch"
     PER_SHARD = "per_shard"
     CENTRALIZED = "centralized"
+
+
+#: Statistics-exchange cadence for CENTRALIZED (see module docstring).
+EXCHANGE_MODES = ("eager", "deferred", "deferred-async")
 
 
 def reduce_stats(stats: FilterStats, scope: Scope,

@@ -18,9 +18,15 @@ policy decides what crosses the network:
                  the axis (``scope.reduce_stats``) before they fold into the
                  epoch accumulators, so every shard accumulates identical
                  global statistics and adopts the identical global order at
-                 every epoch boundary. Costs one small (2P+G+1 floats)
-                 all-reduce per step; deferring it to epoch boundaries is a
-                 ROADMAP open item.
+                 every epoch boundary. With ``exchange="eager"`` that is one
+                 small (2P+G+1 floats) all-reduce per step; with
+                 ``exchange="deferred"`` the counters accumulate locally and
+                 ONE collective fires per ``calculate_rate`` rows at the
+                 epoch boundary (``sharded_exchange`` — a separate jitted
+                 call, so the per-step module compiles with no all-reduce;
+                 sums are associative, so the adopted perm is identical).
+                 ``"deferred-async"`` folds the merged stats in one epoch
+                 late, overlapping the collective with filter work.
   PER_BATCH    — the per-task strawman: evidence dies with each batch on
                  each shard (monitor stride and epoch counter persist).
 
@@ -47,7 +53,8 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map
-from repro.core.adaptive_filter import AdaptiveFilter, AdaptiveFilterConfig
+from repro.core.adaptive_filter import (AdaptiveFilter, AdaptiveFilterConfig,
+                                        drive_exchange)
 from repro.core.ordering import OrderState
 from repro.core.predicates import Predicate
 
@@ -93,6 +100,9 @@ class ShardedAdaptiveFilter:
         self.num_shards = int(mesh.shape[axis_name])
         self._jit_step = None
         self._jit_step_compact = None
+        self._jit_exchange = None
+        self._jit_exchange_with = None
+        self._pending_stats = None   # deferred-async: last boundary's merge
 
     # ---------------------------------------------------------------- state
     def init_state(self) -> OrderState:
@@ -122,18 +132,20 @@ class ShardedAdaptiveFilter:
         return shard_map(local, mesh=self.mesh, in_specs=in_specs,
                          out_specs=out_specs)(state, columns)
 
-    def sharded_step_compact(self, state: OrderState, columns: jnp.ndarray):
-        """``sharded_step`` + per-shard device-side compaction.
+    def sharded_step_compact(self, state: OrderState, columns: jnp.ndarray,
+                             *, capacity: int | None = None):
+        """``sharded_step`` + per-shard single-pass device compaction.
 
         Returns (new_state, packed f32[S, C, cap], n_kept i32[S],
         mask bool[S·R], metrics). ``packed[i, :, :n_kept[i]]`` equals shard
-        i's host boolean-mask survivors bit-exactly.
+        i's host boolean-mask survivors bit-exactly. ``capacity`` is the
+        per-shard width (static under jit; None → local batch width).
         """
 
         def local(st, cols):
             st = shard_slice(st, 0)
             new_st, packed, n_kept, mask, metrics = self.inner.step_compact(
-                st, cols)
+                st, cols, capacity=capacity)
             return (jax.tree.map(lambda x: x[None], new_st), packed[None],
                     n_kept[None], mask, jax.tree.map(lambda x: x[None],
                                                      metrics))
@@ -151,12 +163,71 @@ class ShardedAdaptiveFilter:
     @property
     def jit_step_compact(self):
         if self._jit_step_compact is None:
-            self._jit_step_compact = jax.jit(self.sharded_step_compact)
+            self._jit_step_compact = jax.jit(
+                self.sharded_step_compact, static_argnames=("capacity",))
         return self._jit_step_compact
+
+    # ------------------------------------------------------ deferred epochs
+    def _sharded_exchange(self, state: OrderState, use_stats=None):
+        """Shard_mapped ``AdaptiveFilter.exchange_update``: the deferred
+        mode's single per-epoch collective (psum inside the shard_map body),
+        returning (new_state [S,...], merged_stats [S,...] — every shard row
+        holds the identical global sums)."""
+
+        def local(st, *maybe):
+            st = shard_slice(st, 0)
+            us = shard_slice(maybe[0], 0) if maybe else None
+            new_st, merged = self.inner.exchange_update(st, us)
+            return (jax.tree.map(lambda x: x[None], new_st),
+                    jax.tree.map(lambda x: x[None], merged))
+
+        a = self.axis_name
+        n_in = 1 if use_stats is None else 2
+        in_specs = (P(a),) * n_in
+        out_specs = (P(a), P(a))
+        args = (state,) if use_stats is None else (state, use_stats)
+        return shard_map(local, mesh=self.mesh, in_specs=in_specs,
+                         out_specs=out_specs)(*args)
+
+    @property
+    def jit_exchange(self):
+        if self._jit_exchange is None:
+            self._jit_exchange = jax.jit(lambda s: self._sharded_exchange(s))
+        return self._jit_exchange
+
+    @property
+    def jit_exchange_with(self):
+        if self._jit_exchange_with is None:
+            self._jit_exchange_with = jax.jit(
+                lambda s, st: self._sharded_exchange(s, st))
+        return self._jit_exchange_with
+
+    def exchange_due(self, state: OrderState) -> bool:
+        return self.inner.exchange_due(state)
+
+    def maybe_exchange(self, state: OrderState) -> OrderState:
+        """Drive the deferred epoch boundary if due (host helper; the shared
+        driver with the shard_mapped exchange callables)."""
+        return drive_exchange(self, state)
+
+    # -------------------------------------------------- capacity auto-tune
+    def resolve_capacity(self, n_rows_local: int) -> int:
+        return self.inner.resolve_capacity(n_rows_local)
+
+    def observe_for_capacity(self, evidence_state, new_state,
+                             n_rows_local: int) -> None:
+        self.inner.observe_for_capacity(evidence_state, new_state,
+                                        n_rows_local)
 
     # ------------------------------------------------------------- analysis
     def compiled_text(self, state: OrderState, columns: jnp.ndarray) -> str:
         """Compiled HLO of one sharded step — what the collective-freedom
-        assertion (PER_SHARD ⇒ no all-reduce/all-gather) greps."""
+        assertions grep (PER_SHARD ⇒ no all-reduce; deferred CENTRALIZED ⇒
+        no all-reduce in the per-STEP module either)."""
         return jax.jit(self.sharded_step).lower(
             state, columns).compile().as_text()
+
+    def compiled_exchange_text(self, state: OrderState) -> str:
+        """Compiled HLO of the boundary exchange — deferred CENTRALIZED must
+        show its one all-reduce HERE and only here."""
+        return self.jit_exchange.lower(state).compile().as_text()

@@ -20,15 +20,26 @@ Both emit fixed-shape LM batches {"tokens": i32[B, S], "labels": i32[B, S]}
 ready for ``train_step``, checkpoint/restore bit-identically (the
 fault-tolerance tests restart mid-stream and compare batch sequences), and
 honour ``compact_output``: survivors then arrive as padded on-device
-buffers + counts and the host never boolean-indexes a batch.
+buffers + counts and the host never boolean-indexes a batch. With
+``device_tokenize=True`` (needs ``compact_output``) the tokenize/pack stage
+consumes those padded buffers ON DEVICE too (``tokenizer.tokens_from_padded``
+— valid-count-masked hash + O(N) cumsum pack), so one ingestion iteration
+moves exactly one dense token buffer to the host: stream → filter →
+compact → tokenize is a single device-resident pass. Deferred-exchange
+epoch boundaries (``AdaptiveFilterConfig.exchange``) and auto capacity
+re-tuning (``compact_capacity="auto"``) are driven from here, after each
+step.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import logging
 from typing import Iterator, Sequence
 
 import numpy as np
+
+log = logging.getLogger(__name__)
 
 from repro.core.adaptive_filter import AdaptiveFilter
 from repro.core.sharded import ShardedAdaptiveFilter
@@ -95,9 +106,7 @@ class _LMBatchEmitter:
     ``_buffer``, and ``batches_emitted`` on self.
     """
 
-    def _emit(self, survivors: np.ndarray) -> Iterator[dict]:
-        toks = tokenizer.rows_to_tokens(
-            survivors, self.vocab_size, self.tokens_per_row)
+    def _emit_tokens(self, toks: np.ndarray) -> Iterator[dict]:
         self._buffer = np.concatenate([self._buffer, toks])
         need = self.batch_size * (self.seq_len + 1)
         while self._buffer.size >= need:
@@ -107,11 +116,22 @@ class _LMBatchEmitter:
             yield {"tokens": seq[:, :-1].astype(np.int32),
                    "labels": seq[:, 1:].astype(np.int32)}
 
+    def _emit(self, survivors: np.ndarray) -> Iterator[dict]:
+        yield from self._emit_tokens(tokenizer.rows_to_tokens(
+            survivors, self.vocab_size, self.tokens_per_row))
+
+    def _warn_dropped(self, n_dropped: int) -> None:
+        if n_dropped:
+            log.warning(
+                "compaction overflow: %d survivors dropped this step "
+                "(compact_capacity too small — raise it or use 'auto')",
+                n_dropped)
+
 
 class Pipeline(_LMBatchEmitter):
     def __init__(self, stream: LogStream, filt: AdaptiveFilter,
                  batch_size: int, seq_len: int, vocab_size: int,
-                 tokens_per_row: int = 8):
+                 tokens_per_row: int = 8, device_tokenize: bool = False):
         self.stream = stream
         self.filt = filt
         self.batch_size = batch_size
@@ -119,6 +139,10 @@ class Pipeline(_LMBatchEmitter):
         self.vocab_size = vocab_size
         self.tokens_per_row = tokens_per_row
         self._compact = filt.config.compact_output
+        if device_tokenize and not self._compact:
+            raise ValueError("device_tokenize consumes the padded compacted "
+                             "buffers — it needs compact_output=True")
+        self._device_tokenize = device_tokenize
         self._jit_step = filt.jit_step_compact if self._compact \
             else filt.jit_step               # compiled once per filter
         self._fstate = filt.init_state()
@@ -149,38 +173,58 @@ class Pipeline(_LMBatchEmitter):
 
     # -------------------------------------------------------------- iteration
     def _filter_batch(self, columns: np.ndarray):
-        """Run one jitted filter step; returns (survivors f32[C,n], n_pass).
+        """Run one jitted filter step; returns (survivors | device tokens,
+        n_pass).
 
         ``n_pass`` counts the survivors actually KEPT (and tokenized): under
         a saturating ``compact_capacity`` that is ``n_kept``, not the mask
         popcount — ``rows_pass`` must agree with the emitted token stream.
+        With ``device_tokenize`` the first element is the packed token
+        stream instead of survivor columns (the batch never comes back to
+        the host as rows at all).
         """
         import jax.numpy as jnp
 
         cols = jnp.asarray(columns, jnp.float32)
+        n_rows = int(cols.shape[1])
+        prev = self._fstate
         if self._compact:
+            cap = self.filt.resolve_capacity(n_rows)
             self._fstate, packed, n_kept, _, metrics = self._jit_step(
-                self._fstate, cols)
-            survivors = np.asarray(packed)[:, :int(n_kept)]
+                self._fstate, cols, capacity=cap)
+            if self._device_tokenize:
+                toks, n_tok = tokenizer.tokens_from_padded(
+                    packed, n_kept, self.vocab_size, self.tokens_per_row)
+                payload = np.asarray(toks)[:int(n_tok)]
+            else:
+                payload = np.asarray(packed)[:, :int(n_kept)]
             n_pass = int(n_kept)
         else:
             self._fstate, mask, metrics = self._jit_step(self._fstate, cols)
             mask_np = np.asarray(mask)
-            survivors = columns[:, mask_np]
+            payload = columns[:, mask_np]
             n_pass = int(mask_np.sum())
+        self._fstate = self.filt.maybe_exchange(self._fstate)
+        self.filt.observe_for_capacity(prev, self._fstate, n_rows)
+        n_dropped = int(np.asarray(metrics.n_dropped))
+        self._warn_dropped(n_dropped)
         self.last_metrics = {
             "work_units": float(metrics.work_units),
             "perm": np.asarray(metrics.perm).tolist(),
-            "epoch": int(metrics.epoch),
+            "epoch": int(np.max(np.asarray(self._fstate.epoch))),
+            "n_dropped": n_dropped,
         }
-        return survivors, n_pass
+        return payload, n_pass
 
     def __iter__(self) -> Iterator[dict]:
         for rb in self.stream:
-            survivors, n_pass = self._filter_batch(rb.columns)
+            payload, n_pass = self._filter_batch(rb.columns)
             self.rows_in += rb.n_rows
             self.rows_pass += n_pass
-            yield from self._emit(survivors)
+            if self._device_tokenize:
+                yield from self._emit_tokens(payload)
+            else:
+                yield from self._emit(payload)
 
 
 # =============================================================== sharded
@@ -209,7 +253,8 @@ class ShardedPipeline(_LMBatchEmitter):
 
     def __init__(self, streams: Sequence[LogStream],
                  filt: ShardedAdaptiveFilter, batch_size: int, seq_len: int,
-                 vocab_size: int, tokens_per_row: int = 8):
+                 vocab_size: int, tokens_per_row: int = 8,
+                 device_tokenize: bool = False):
         if len(streams) != filt.num_shards:
             raise ValueError(
                 f"{len(streams)} streams for {filt.num_shards} shards")
@@ -220,6 +265,10 @@ class ShardedPipeline(_LMBatchEmitter):
         self.vocab_size = vocab_size
         self.tokens_per_row = tokens_per_row
         self._compact = filt.config.compact_output
+        if device_tokenize and not self._compact:
+            raise ValueError("device_tokenize consumes the padded compacted "
+                             "buffers — it needs compact_output=True")
+        self._device_tokenize = device_tokenize
         self._jit_step = filt.jit_step_compact if self._compact \
             else filt.jit_step
         self._fstate = filt.init_state()
@@ -256,31 +305,50 @@ class ShardedPipeline(_LMBatchEmitter):
 
     # -------------------------------------------------------------- iteration
     def _filter_block(self, columns: np.ndarray):
-        """One sharded step over the [C, S·R] block; survivors shard-major."""
+        """One sharded step over the [C, S·R] block.
+
+        Returns (survivors shard-major | packed device tokens, n_pass).
+        With ``device_tokenize`` the whole filter→compact→tokenize→pack
+        chain runs in two jitted calls on the mesh and only the dense token
+        stream crosses to the host.
+        """
         import jax.numpy as jnp
 
         n_shards = self.filt.num_shards
         cols = jnp.asarray(columns, jnp.float32)
+        n_local = int(cols.shape[1]) // n_shards
+        prev = self._fstate
         if self._compact:
+            cap = self.filt.resolve_capacity(n_local)
             self._fstate, packed, n_kept, mask, metrics = self._jit_step(
-                self._fstate, cols)
-            packed_np = np.asarray(packed)
+                self._fstate, cols, capacity=cap)
             counts = np.asarray(n_kept)
-            survivors = np.concatenate(
-                [packed_np[s][:, :int(counts[s])] for s in range(n_shards)],
-                axis=1)
+            if self._device_tokenize:
+                toks, n_tok = tokenizer.tokens_from_padded(
+                    packed, n_kept, self.vocab_size, self.tokens_per_row)
+                payload = np.asarray(toks)[:int(n_tok)]
+            else:
+                packed_np = np.asarray(packed)
+                payload = np.concatenate(
+                    [packed_np[s][:, :int(counts[s])]
+                     for s in range(n_shards)], axis=1)
             n_pass = int(counts.sum())
         else:
             self._fstate, mask, metrics = self._jit_step(self._fstate, cols)
             mask_np = np.asarray(mask)
-            survivors = columns[:, mask_np]
+            payload = columns[:, mask_np]
             n_pass = int(mask_np.sum())
+        self._fstate = self.filt.maybe_exchange(self._fstate)
+        self.filt.observe_for_capacity(prev, self._fstate, n_local)
+        n_dropped = int(np.asarray(metrics.n_dropped).sum())
+        self._warn_dropped(n_dropped)
         self.last_metrics = {
             "work_units": float(np.asarray(metrics.work_units).sum()),
             "perm": np.asarray(metrics.perm).tolist(),   # [S, P]
-            "epoch": int(np.asarray(metrics.epoch).max()),
+            "epoch": int(np.asarray(self._fstate.epoch).max()),
+            "n_dropped": n_dropped,
         }
-        return survivors, n_pass
+        return payload, n_pass
 
     def __iter__(self) -> Iterator[dict]:
         iters = [iter(s) for s in self.streams]
@@ -292,16 +360,20 @@ class ShardedPipeline(_LMBatchEmitter):
                     return
                 rbs.append(rb)
             cols = np.concatenate([rb.columns for rb in rbs], axis=1)
-            survivors, n_pass = self._filter_block(cols)
+            payload, n_pass = self._filter_block(cols)
             self.rows_in += cols.shape[1]
             self.rows_pass += n_pass
-            yield from self._emit(survivors)
+            if self._device_tokenize:
+                yield from self._emit_tokens(payload)
+            else:
+                yield from self._emit(payload)
 
 
 def make_sharded_pipeline(filt: ShardedAdaptiveFilter, *, total_rows: int,
                           batch_rows: int, batch_size: int, seq_len: int,
                           vocab_size: int, seed: int = 0, drift=None,
-                          tokens_per_row: int = 8) -> ShardedPipeline:
+                          tokens_per_row: int = 8,
+                          device_tokenize: bool = False) -> ShardedPipeline:
     """S round-robin partitions of one logical stream → ShardedPipeline."""
     from repro.data.stream import DriftConfig
 
@@ -312,4 +384,5 @@ def make_sharded_pipeline(filt: ShardedAdaptiveFilter, *, total_rows: int,
                for i in range(filt.num_shards)]
     return ShardedPipeline(streams, filt, batch_size=batch_size,
                            seq_len=seq_len, vocab_size=vocab_size,
-                           tokens_per_row=tokens_per_row)
+                           tokens_per_row=tokens_per_row,
+                           device_tokenize=device_tokenize)

@@ -6,21 +6,47 @@ and cheap: each surviving row is mixed into ``tokens_per_row`` int tokens via
 a splitmix-style integer hash of its column values, so the LM examples are
 (a) a pure function of the filtered stream and (b) reproducible across
 restarts — which the fault-tolerance tests rely on.
+
+Two implementations of the SAME hash:
+
+  ``rows_to_tokens``        — numpy, host path (dense survivor rows in).
+  ``tokens_from_padded``    — jitted jax path over the padded ``[S, C, cap]``
+                              survivor buffers + counts that device-side
+                              compaction emits, so the tokenize/pack stage
+                              runs on the mesh and the batch columns never
+                              round-trip through a host boolean index (the
+                              "compaction-aware downstream stage" of the
+                              single-pass ingestion path). Valid rows are
+                              selected by count masking and the tokens are
+                              packed shard-major with the same O(N) cumsum
+                              scatter the compactor uses — bit-identical to
+                              the host stream (pinned by tests).
+
+The jax path is traced under ``jax.experimental.enable_x64`` because the
+hash is defined on the u64 bit pattern of the f64-widened column values
+(the numpy path's ``astype(float64).view(uint64)``). That makes it a CPU /
+GPU device stage today; a TPU deployment would split the mix into u32
+limbs — the call-site contract (padded buffers + counts in, packed token
+ids + total out) would not change.
 """
 
 from __future__ import annotations
 
+import functools
+
 import numpy as np
 
 _GAMMA = np.uint64(0x9E3779B97F4A7C15)
+_MIX1 = np.uint64(0xBF58476D1CE4E5B9)
+_MIX2 = np.uint64(0x94D049BB133111EB)
 
 
 def _splitmix(x: np.ndarray) -> np.ndarray:
     x = (x + _GAMMA).astype(np.uint64)
     x ^= x >> np.uint64(30)
-    x = (x * np.uint64(0xBF58476D1CE4E5B9)) & np.uint64(0xFFFFFFFFFFFFFFFF)
+    x = (x * _MIX1) & np.uint64(0xFFFFFFFFFFFFFFFF)
     x ^= x >> np.uint64(27)
-    x = (x * np.uint64(0x94D049BB133111EB)) & np.uint64(0xFFFFFFFFFFFFFFFF)
+    x = (x * _MIX2) & np.uint64(0xFFFFFFFFFFFFFFFF)
     x ^= x >> np.uint64(31)
     return x
 
@@ -39,3 +65,77 @@ def rows_to_tokens(columns: np.ndarray, vocab_size: int,
         h = _splitmix(h)
         toks.append((h % np.uint64(vocab_size)).astype(np.int32))
     return np.stack(toks, axis=1).reshape(-1)
+
+
+# ============================================================== device path
+@functools.cache
+def _jit_tokens_from_padded():
+    """Build (lazily, once) the jitted device tokenizer.
+
+    Deferred import + trace so plain host users never pay for it, and the
+    uint64 lowering is set up exactly once under ``enable_x64``.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    def _splitmix_dev(x):
+        x = x + jnp.uint64(0x9E3779B97F4A7C15)
+        x ^= x >> jnp.uint64(30)
+        x = x * jnp.uint64(0xBF58476D1CE4E5B9)
+        x ^= x >> jnp.uint64(27)
+        x = x * jnp.uint64(0x94D049BB133111EB)
+        x ^= x >> jnp.uint64(31)
+        return x
+
+    @functools.partial(jax.jit,
+                       static_argnames=("vocab_size", "tokens_per_row"))
+    def tok(packed, counts, *, vocab_size: int, tokens_per_row: int):
+        s, c, cap = packed.shape
+        # hash every slot (padding rows hash to garbage and are masked out —
+        # branch-free, the device way)
+        base = jnp.zeros((s, cap), jnp.uint64)
+        for ci in range(c):
+            bits = jax.lax.bitcast_convert_type(
+                packed[:, ci, :].astype(jnp.float64), jnp.uint64)
+            base = _splitmix_dev(base ^ bits)
+        toks = []
+        h = base
+        for _ in range(tokens_per_row):
+            h = _splitmix_dev(h)
+            toks.append((h % jnp.uint64(vocab_size)).astype(jnp.int32))
+        tokens = jnp.stack(toks, axis=-1)            # i32[S, cap, T]
+        # valid-count masking + shard-major O(N) pack (same cumsum scatter
+        # as the survivor compactor — no sort anywhere in the pipeline)
+        valid = (jnp.arange(cap)[None, :] < counts[:, None])   # bool[S, cap]
+        flat_valid = jnp.repeat(valid.reshape(-1), tokens_per_row)
+        flat = tokens.reshape(-1)
+        n = flat.shape[0]
+        pos = jnp.cumsum(flat_valid.astype(jnp.int32)) - 1
+        dest = jnp.where(flat_valid, pos, n)
+        out = jnp.zeros((n + 1,), jnp.int32).at[dest].set(flat, mode="drop")
+        total = jnp.sum(counts).astype(jnp.int32) * tokens_per_row
+        return out[:n], total
+
+    return tok
+
+
+def tokens_from_padded(packed, counts, vocab_size: int,
+                       tokens_per_row: int = 8):
+    """Device tokenize+pack over padded survivor buffers.
+
+    ``packed``: f32[S, C, cap] (or [C, cap] for a single pipeline — auto-
+    promoted), ``counts``: i32[S] valid widths. Returns (tokens i32[S·cap·T]
+    with the first ``n_valid`` entries live, n_valid i32[]) — the first
+    ``n_valid`` tokens are bit-identical to ``rows_to_tokens`` applied to
+    the shard-major concatenation of the valid survivor slices.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    if packed.ndim == 2:
+        packed = packed[None]
+        counts = jnp.asarray(counts, jnp.int32).reshape((1,))
+    with jax.experimental.enable_x64():
+        return _jit_tokens_from_padded()(
+            packed, counts, vocab_size=vocab_size,
+            tokens_per_row=tokens_per_row)

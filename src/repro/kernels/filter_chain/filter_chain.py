@@ -31,8 +31,30 @@ compute is 2D (1, TILE)-shaped for VPU lane alignment; TILE is a multiple
 of 128.
 
 Grid-step cost model (for §Roofline): bytes/tile = C·TILE·4 in + TILE out;
-FLOPs/tile ≈ TILE · Σ_{k ≤ stop} cost(perm[k]) — memory-bound at ~0.25–2
-FLOP/byte unless expensive (HASHMIX) predicates dominate.
+with in-kernel compaction the tile additionally writes the within-tile
+packed survivors (C·TILE·4) and one i32 count; the second (gather) launch
+then reads only survivor data — p·C·TILE·4 per tile at pass-rate p — plus
+the T-entry offset vector, never the full batch again.  FLOPs/tile ≈
+TILE · Σ_{k ≤ stop} cost(perm[k]) — memory-bound at ~0.25–2 FLOP/byte
+unless expensive (HASHMIX) predicates dominate.
+(``benchmarks/roofline.py::filter_ingest_model`` renders this model.)
+
+Single-pass compaction (two launches, no sort):
+
+  launch 1 (this kernel, ``compact=True``): while the (C, TILE) tile is
+    still in VMEM, each grid step computes every survivor's within-tile
+    slot as its exclusive mask cumsum (an O(TILE) scan — the argsort the
+    jnp path used to pay is gone), scatters survivors to the front of the
+    tile's own slot in the packed output, and emits the tile's survivor
+    count;
+  glue: an O(n_tiles) exclusive cumsum of the counts (XLA, a few hundred
+    ints) turns per-tile slots into global offsets;
+  launch 2 (``compact_gather_pallas``): one grid step per tile stores the
+    packed tile at its global offset into the [C, cap + TILE] output ring.
+    Stores overlap by construction — tile t's zero tail is overwritten by
+    tile t+1's survivors (the TPU grid is sequential) — so the result is
+    the densely packed survivor buffer without reading the full-width
+    columns a second time.
 """
 
 from __future__ import annotations
@@ -83,7 +105,8 @@ def _kernel(# --- SMEM scalar/spec refs ---
             cols_ref,
             # --- outputs ---
             mask_ref, active_ref, cut_ref, gcut_ref, nmon_ref,
-            *, n_preds: int, tile: int, groups: tuple):
+            *compact_refs,  # (packed_ref, cnt_ref) when compact=True
+            n_preds: int, tile: int, groups: tuple, fill: float = 0.0):
     t = pl.program_id(0)
     n_rows = meta_ref[0]
     collect_rate = meta_ref[1]
@@ -124,6 +147,24 @@ def _kernel(# --- SMEM scalar/spec refs ---
         mask = new_mask if closes is True \
             else jnp.where(closes, new_mask, mask)
     mask_ref[0, :] = mask[0].astype(jnp.int8)
+
+    # ------------------------------------------------- in-kernel compaction
+    # The tile is still resident in VMEM: pack its survivors to the front of
+    # its own slot NOW, so the gather launch never re-reads the full batch.
+    # Slot = exclusive cumsum of the mask (O(TILE) scan, no sort); the
+    # non-survivors scatter into a dump lane that is sliced off. The zero
+    # (``fill``) tail is load-bearing: launch 2 relies on it when its
+    # overlapping stores stitch tiles together.
+    if compact_refs:
+        packed_ref, cnt_ref = compact_refs
+        mrow = mask[0]                                   # bool[TILE]
+        mi = mrow.astype(jnp.int32)
+        pos = jnp.cumsum(mi) - 1                         # within-tile slot
+        dest = jnp.where(mrow, pos, tile)
+        buf = jnp.full((cols_ref.shape[0], tile + 1), fill, cols_ref.dtype)
+        buf = buf.at[:, dest].set(cols_ref[:, :], mode="drop")
+        packed_ref[:, :] = buf[:, :tile]
+        cnt_ref[0, 0] = jnp.sum(mi)
 
     # --------------------------------------------------------- monitor lane
     # row mode (paper-exact): deterministic stride over the GLOBAL row index
@@ -171,13 +212,16 @@ def _kernel(# --- SMEM scalar/spec refs ---
 
 def filter_chain_pallas(columns: jnp.ndarray, specs, perm: jnp.ndarray,
                         meta: jnp.ndarray, *, tile: int = DEFAULT_TILE,
-                        interpret: bool = True):
+                        interpret: bool = True, compact: bool = False,
+                        fill: float = 0.0):
     """Launch the fused chain kernel.
 
     columns: f32[C, R_padded] with R_padded % tile == 0.
     meta:    i32[4] = (n_rows_actual, collect_rate, sample_phase, mode).
     Returns (mask i8[1,Rp], active f32[n_tiles,P], cut f32[n_tiles,P],
-             gcut f32[n_tiles,G], nmon f32[n_tiles,1]).
+             gcut f32[n_tiles,G], nmon f32[n_tiles,1]); with
+    ``compact=True`` additionally (packed f32[C,Rp] — survivors packed to
+    the front of each tile's slot, ``fill`` tail — and cnt i32[n_tiles,1]).
     """
     n_cols, n_rows_p = columns.shape
     if n_rows_p % tile:
@@ -191,8 +235,28 @@ def filter_chain_pallas(columns: jnp.ndarray, specs, perm: jnp.ndarray,
     smem = functools.partial(pl.BlockSpec, memory_space=pltpu.SMEM)
     grid = (n_tiles,)
 
+    out_specs = [
+        pl.BlockSpec((1, tile), lambda i: (0, i)),
+        pl.BlockSpec((1, n_preds), lambda i: (i, 0)),
+        pl.BlockSpec((1, n_preds), lambda i: (i, 0)),
+        pl.BlockSpec((1, n_groups), lambda i: (i, 0)),
+        pl.BlockSpec((1, 1), lambda i: (i, 0)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((1, n_rows_p), jnp.int8),
+        jax.ShapeDtypeStruct((n_tiles, n_preds), jnp.float32),
+        jax.ShapeDtypeStruct((n_tiles, n_preds), jnp.float32),
+        jax.ShapeDtypeStruct((n_tiles, n_groups), jnp.float32),
+        jax.ShapeDtypeStruct((n_tiles, 1), jnp.float32),
+    ]
+    if compact:
+        out_specs += [pl.BlockSpec((n_cols, tile), lambda i: (0, i)),
+                      pl.BlockSpec((1, 1), lambda i: (i, 0))]
+        out_shape += [jax.ShapeDtypeStruct((n_cols, n_rows_p), jnp.float32),
+                      jax.ShapeDtypeStruct((n_tiles, 1), jnp.int32)]
+
     kernel = functools.partial(_kernel, n_preds=n_preds, tile=tile,
-                               groups=groups)
+                               groups=groups, fill=fill)
     return pl.pallas_call(
         kernel,
         grid=grid,
@@ -200,21 +264,62 @@ def filter_chain_pallas(columns: jnp.ndarray, specs, perm: jnp.ndarray,
             smem(), smem(), smem(), smem(), smem(), smem(), smem(), smem(),
             pl.BlockSpec((n_cols, tile), lambda i: (0, i)),
         ],
-        out_specs=[
-            pl.BlockSpec((1, tile), lambda i: (0, i)),
-            pl.BlockSpec((1, n_preds), lambda i: (i, 0)),
-            pl.BlockSpec((1, n_preds), lambda i: (i, 0)),
-            pl.BlockSpec((1, n_groups), lambda i: (i, 0)),
-            pl.BlockSpec((1, 1), lambda i: (i, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((1, n_rows_p), jnp.int8),
-            jax.ShapeDtypeStruct((n_tiles, n_preds), jnp.float32),
-            jax.ShapeDtypeStruct((n_tiles, n_preds), jnp.float32),
-            jax.ShapeDtypeStruct((n_tiles, n_groups), jnp.float32),
-            jax.ShapeDtypeStruct((n_tiles, 1), jnp.float32),
-        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
         interpret=interpret,
         name="adaptive_filter_chain",
     )(specs.column, specs.op, specs.t1, specs.t2, specs.rounds, perm, garr,
       meta, columns)
+
+
+def _gather_kernel(off_ref, packed_ref, out_ref, *, tile: int, capacity: int,
+                   fill: float):
+    """Second launch: stitch packed tiles at their global offsets.
+
+    The output block is the SAME [C, cap + TILE] window for every grid step
+    (revisited block). Step t stores its full packed tile at the dynamic
+    offset; because offsets advance by the previous tile's survivor count,
+    each store's ``fill`` tail is overwritten by the next tile's survivors —
+    the sequential TPU grid makes the overlap well-defined. Only survivor
+    bytes ever move twice.
+    """
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():
+        out_ref[:, :] = jnp.full(out_ref.shape, fill, out_ref.dtype)
+
+    off = off_ref[t]
+
+    @pl.when(off < capacity)                  # saturated: drop whole tile
+    def _store():
+        pl.store(out_ref, (slice(None), pl.ds(off, tile)), packed_ref[:, :])
+
+
+def compact_gather_pallas(packed_tiles: jnp.ndarray, offsets: jnp.ndarray,
+                          capacity: int, *, tile: int = DEFAULT_TILE,
+                          interpret: bool = True, fill: float = 0.0):
+    """Gather within-tile-packed survivors into one [C, capacity] buffer.
+
+    ``packed_tiles``: f32[C, Rp] from the chain launch (``compact=True``);
+    ``offsets``: i32[n_tiles] exclusive cumsum of the per-tile counts.
+    Reads only the packed tiles + the offset vector — the original columns
+    are not touched. Survivors beyond ``capacity`` are dropped (saturation
+    semantics identical to ``filter_exec.compact_fixed``).
+    """
+    n_cols, n_rows_p = packed_tiles.shape
+    n_tiles = n_rows_p // tile
+    kernel = functools.partial(_gather_kernel, tile=tile, capacity=capacity,
+                               fill=fill)
+    out = pl.pallas_call(
+        kernel,
+        grid=(n_tiles,),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM),
+                  pl.BlockSpec((n_cols, tile), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((n_cols, capacity + tile), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_cols, capacity + tile),
+                                       jnp.float32),
+        interpret=interpret,
+        name="adaptive_filter_compact_gather",
+    )(offsets, packed_tiles)
+    return out[:, :capacity]

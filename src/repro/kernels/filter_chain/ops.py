@@ -1,10 +1,12 @@
-"""jit'd wrapper around the fused filter-chain kernel.
+"""jit'd wrappers around the fused filter-chain kernel.
 
 Handles padding to tile multiples, packs the SMEM meta scalars, launches the
 kernel, and reduces per-tile counters into the framework-wide
 ``ChainResult`` contract shared with ``core.filter_exec`` (jnp path) and
-``ref.py`` (oracle). ``interpret=True`` on non-TPU backends, so the same
-call validates on CPU and runs compiled on TPU.
+``ref.py`` (oracle). ``filter_chain_compact`` additionally fuses survivor
+compaction into the same pass (in-kernel cumsum pack + offset-stitch gather
+launch — see ``filter_chain.py``). ``interpret=True`` on non-TPU backends,
+so the same call validates on CPU and runs compiled on TPU.
 """
 
 from __future__ import annotations
@@ -17,11 +19,36 @@ import jax.numpy as jnp
 from repro.core.engine.base import ChainResult
 from repro.core.predicates import PredicateSpecs
 from repro.kernels.filter_chain.filter_chain import (DEFAULT_TILE,
+                                                     compact_gather_pallas,
                                                      filter_chain_pallas)
 
 
 def _should_interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def _pack_meta(n_rows, collect_rate, sample_phase, monitor_mode):
+    return jnp.stack([jnp.asarray(n_rows, jnp.int32),
+                      jnp.asarray(collect_rate, jnp.int32),
+                      jnp.asarray(sample_phase, jnp.int32),
+                      jnp.asarray(1 if monitor_mode == "block" else 0,
+                                  jnp.int32)])
+
+
+def _reduce_result(mask_i8, active, cut, gcut, nmon, specs, perm, n_rows):
+    active_before = jnp.sum(active, axis=0)                  # f32[P]
+    cost_in_order = specs.static_cost[perm]
+    work = jnp.sum(active_before * cost_in_order)
+    n_monitored = jnp.sum(nmon)
+    return ChainResult(
+        mask=mask_i8[0, :n_rows].astype(bool),
+        work_units=work,
+        active_before=active_before,
+        cut_counts=jnp.sum(cut, axis=0),
+        n_monitored=n_monitored,
+        monitor_cost=specs.static_cost * n_monitored,
+        group_cut_counts=jnp.sum(gcut, axis=0),
+    )
 
 
 @functools.partial(jax.jit,
@@ -42,26 +69,58 @@ def filter_chain(columns: jnp.ndarray, specs: PredicateSpecs,
     pad = (-n_rows) % tile
     if pad:
         columns = jnp.pad(columns, ((0, 0), (0, pad)))
-    meta = jnp.stack([jnp.asarray(n_rows, jnp.int32),
-                      jnp.asarray(collect_rate, jnp.int32),
-                      jnp.asarray(sample_phase, jnp.int32),
-                      jnp.asarray(1 if monitor_mode == "block" else 0,
-                                  jnp.int32)])
+    meta = _pack_meta(n_rows, collect_rate, sample_phase, monitor_mode)
 
     mask_i8, active, cut, gcut, nmon = filter_chain_pallas(
         columns, specs, perm.astype(jnp.int32), meta, tile=tile,
         interpret=_should_interpret())
 
-    active_before = jnp.sum(active, axis=0)                  # f32[P]
-    cost_in_order = specs.static_cost[perm]
-    work = jnp.sum(active_before * cost_in_order)
-    n_monitored = jnp.sum(nmon)
-    return ChainResult(
-        mask=mask_i8[0, :n_rows].astype(bool),
-        work_units=work,
-        active_before=active_before,
-        cut_counts=jnp.sum(cut, axis=0),
-        n_monitored=n_monitored,
-        monitor_cost=specs.static_cost * n_monitored,
-        group_cut_counts=jnp.sum(gcut, axis=0),
-    )
+    return _reduce_result(mask_i8, active, cut, gcut, nmon, specs, perm,
+                          n_rows)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("collect_rate", "tile", "monitor_mode",
+                                    "capacity", "fill"))
+def filter_chain_compact(columns: jnp.ndarray, specs: PredicateSpecs,
+                         perm: jnp.ndarray, *, collect_rate: int,
+                         sample_phase, capacity: int,
+                         tile: int = DEFAULT_TILE, monitor_mode: str = "row",
+                         fill: float = 0.0
+                         ) -> tuple[ChainResult, jnp.ndarray, jnp.ndarray]:
+    """Fused chain + single-pass in-kernel compaction (two small launches).
+
+    Returns (ChainResult, packed f32[C, capacity], n_kept i32[]). Launch 1
+    streams each tile HBM→VMEM exactly once and, while the tile is
+    resident, packs its survivors to the front of the tile's slot via the
+    exclusive mask cumsum (no ``argsort``); the only inter-launch work is an
+    O(n_tiles) exclusive cumsum of the per-tile survivor counts; launch 2
+    stitches the packed tiles at their global offsets, touching survivor
+    bytes only. Saturation semantics match ``filter_exec.compact_fixed``:
+    survivors beyond ``capacity`` are dropped and ``n_kept`` saturates.
+    """
+    if monitor_mode not in ("row", "block"):
+        raise ValueError(monitor_mode)
+    n_cols, n_rows = columns.shape
+    pad = (-n_rows) % tile
+    if pad:
+        columns = jnp.pad(columns, ((0, 0), (0, pad)))
+    meta = _pack_meta(n_rows, collect_rate, sample_phase, monitor_mode)
+    interpret = _should_interpret()
+
+    mask_i8, active, cut, gcut, nmon, packed_tiles, tile_cnt = \
+        filter_chain_pallas(columns, specs, perm.astype(jnp.int32), meta,
+                            tile=tile, interpret=interpret, compact=True,
+                            fill=fill)
+
+    cnt = tile_cnt[:, 0]                                     # i32[T]
+    csum = jnp.cumsum(cnt)
+    offsets = jnp.concatenate(
+        [jnp.zeros((1,), csum.dtype), csum[:-1]]).astype(jnp.int32)
+    packed = compact_gather_pallas(packed_tiles, offsets, capacity,
+                                   tile=tile, interpret=interpret, fill=fill)
+    n_kept = jnp.minimum(csum[-1], capacity).astype(jnp.int32)
+
+    result = _reduce_result(mask_i8, active, cut, gcut, nmon, specs, perm,
+                            n_rows)
+    return result, packed, n_kept

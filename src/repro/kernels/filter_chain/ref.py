@@ -67,3 +67,18 @@ def filter_chain_ref(columns: jnp.ndarray, specs: PredicateSpecs,
         monitor_cost=specs.static_cost * n_monitored,
         group_cut_counts=group_cut.astype(jnp.float32),
     )
+
+
+def compact_fixed_ref(columns, mask, capacity: int, fill: float = 0.0):
+    """Host-oracle for fixed-capacity compaction: plain boolean index + pad.
+
+    Deliberately the dumbest possible formulation (numpy boolean indexing,
+    eager) so a bug in the cumsum-scatter or the two-launch kernel path
+    cannot hide in the oracle. Returns (packed f32[C, capacity], n_kept).
+    """
+    cols = np.asarray(columns)
+    m = np.asarray(mask).astype(bool)
+    survivors = cols[:, m][:, :capacity]
+    out = np.full((cols.shape[0], capacity), fill, cols.dtype)
+    out[:, :survivors.shape[1]] = survivors
+    return out, survivors.shape[1]

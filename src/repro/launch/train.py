@@ -30,12 +30,24 @@ from repro.optim import AdamWConfig, init_opt_state
 from repro.runtime import FailureInjector, TrainDriver
 
 
+def parse_capacity(text: str | None) -> int | str | None:
+    """``--compact-capacity`` value: int, "auto", or None (batch width)."""
+    if text is None:
+        return None
+    if text == "auto":
+        return "auto"
+    return int(text)
+
+
 def build_pipeline(cfg, *, batch: int, seq: int, total_rows: int,
                    ordering: OrderingConfig, drift: DriftConfig,
                    shard_id: int = 0, num_shards: int = 1,
                    chain: str = "flat", filter_shards: int = 1,
                    filter_scope: str = "per_shard",
-                   compact_output: bool = False):
+                   compact_output: bool = False,
+                   compact_capacity: int | str | None = None,
+                   exchange: str = "eager",
+                   device_tokenize: bool = False):
     """One ingestion pipeline.
 
     ``filter_shards > 1`` runs the adaptive filter data-parallel under
@@ -46,7 +58,9 @@ def build_pipeline(cfg, *, batch: int, seq: int, total_rows: int,
     """
     preds = (paper_filters_cnf if chain == "cnf" else paper_filters_4)("fig1")
     fcfg = AdaptiveFilterConfig(ordering=ordering, scope=filter_scope,
-                                compact_output=compact_output)
+                                compact_output=compact_output,
+                                compact_capacity=compact_capacity,
+                                exchange=exchange)
     if filter_shards > 1:
         if filter_shards > jax.device_count():
             raise SystemExit(
@@ -58,12 +72,13 @@ def build_pipeline(cfg, *, batch: int, seq: int, total_rows: int,
         filt = ShardedAdaptiveFilter(preds, fcfg, mesh=mesh)
         return make_sharded_pipeline(
             filt, total_rows=total_rows, batch_rows=65536, drift=drift,
-            batch_size=batch, seq_len=seq, vocab_size=cfg.vocab)
+            batch_size=batch, seq_len=seq, vocab_size=cfg.vocab,
+            device_tokenize=device_tokenize)
     filt = AdaptiveFilter(preds, fcfg)
     stream = LogStream(total_rows=total_rows, batch_rows=65536,
                        drift=drift, shard_id=shard_id, num_shards=num_shards)
     return Pipeline(stream, filt, batch_size=batch, seq_len=seq,
-                    vocab_size=cfg.vocab)
+                    vocab_size=cfg.vocab, device_tokenize=device_tokenize)
 
 
 def main() -> None:
@@ -91,6 +106,21 @@ def main() -> None:
     ap.add_argument("--compact-output", action="store_true",
                     help="device-side survivor compaction (padded gather + "
                          "count instead of a host boolean index)")
+    ap.add_argument("--compact-capacity", default=None,
+                    help="compaction width: an int, or 'auto' to track the "
+                         "monitor lane's pass-rate (slack-padded, "
+                         "re-quantized to 128s at epoch boundaries); "
+                         "default = batch width (lossless)")
+    ap.add_argument("--exchange",
+                    choices=["eager", "deferred", "deferred-async"],
+                    default="eager",
+                    help="CENTRALIZED stat exchange cadence: per-step psum "
+                         "(eager), one collective per epoch (deferred), or "
+                         "epoch-late folding (deferred-async)")
+    ap.add_argument("--device-tokenize", action="store_true",
+                    help="tokenize/pack the padded compacted buffers on "
+                         "device (needs --compact-output); the host only "
+                         "ever sees the dense token stream")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--resume", action="store_true")
@@ -115,7 +145,11 @@ def main() -> None:
                               drift=PAPER.drift, chain=args.chain,
                               filter_shards=args.filter_shards,
                               filter_scope=args.filter_scope,
-                              compact_output=args.compact_output)
+                              compact_output=args.compact_output,
+                              compact_capacity=parse_capacity(
+                                  args.compact_capacity),
+                              exchange=args.exchange,
+                              device_tokenize=args.device_tokenize)
 
     driver = TrainDriver(step_fn=step_fn, pipeline=pipeline, params=params,
                          opt_state=opt_state, ckpt_dir=args.ckpt_dir,
