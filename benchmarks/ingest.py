@@ -92,12 +92,13 @@ def time_step(fn, state, cols, steps, repeats: int = 3,
 
 
 def bench_compaction(args, results):
-    """compaction × engine cells on a single unsharded filter."""
+    """compaction × engine cells, every mode driven through ONE
+    ``session.step`` (the argsort cell composes the legacy gather onto the
+    plain step — it benches a path the session no longer emits)."""
     import jax.numpy as jnp
 
-    from repro.core import (AdaptiveFilter, AdaptiveFilterConfig,
-                            OrderingConfig, paper_filters_4)
-    from repro.core.engine import MonitorSpec
+    from repro.core import FilterPlan, OrderingConfig, build_session, \
+        paper_filters_4
     from repro.core import filter_exec
     from repro.data.stream import gen_batch
 
@@ -110,25 +111,36 @@ def bench_compaction(args, results):
     for engine in ("jnp", "pallas"):
         cells = {}
         for mode in ("mask", "argsort", "fused"):
-            cfg = AdaptiveFilterConfig(
-                backend=engine, ordering=ordering,
-                compact_output=(mode == "fused"),
-                compact_capacity=cap if mode == "fused" else None)
-            filt = AdaptiveFilter(paper_filters_4("fig1"), cfg)
-            state = filt.init_state()
-            if mode == "fused":
-                fn = lambda s, c: filt.jit_step_compact(s, c, capacity=cap)
-            elif mode == "argsort":
+            session = build_session(FilterPlan(
+                predicates=paper_filters_4("fig1"), engine=engine,
+                ordering=ordering, compact=(mode == "fused"),
+                capacity=cap if mode == "fused" else None))
+            state = session.init_state()
+            if mode == "argsort":
                 import jax
+
+                filt = session.filter
 
                 def legacy(s, c):
                     s2, mask, met = filt.step(s, c)
                     packed, n_kept = filter_exec.compact_fixed_argsort(
                         c, mask, cap)
                     return s2, packed, n_kept, mask, met
-                fn = jax.jit(legacy)
+                jit_legacy = jax.jit(legacy)
+
+                def fn(s, c, _f=filt, _j=jit_legacy):
+                    # pay the SAME per-call host driving session.step pays
+                    # (asarray, capacity resolve, exchange check, retune
+                    # hook) so the gated ratio compares kernels, not
+                    # dispatch overhead
+                    c = jnp.asarray(c, jnp.float32)
+                    _f.resolve_capacity(int(c.shape[1]))
+                    out = _j(s, c)
+                    s2 = _f.maybe_exchange(out[0])
+                    _f.observe_for_capacity(s, s2, int(c.shape[1]))
+                    return (s2,) + out[1:]
             else:
-                fn = filt.jit_step
+                fn = session.step
             sec = time_step(fn, state, cols, args.steps)
             us_row = sec * 1e6 / rows
             cells[mode] = us_row
@@ -150,8 +162,8 @@ def bench_scopes(args, results):
     import jax
     import jax.numpy as jnp
 
-    from repro.core import (AdaptiveFilterConfig, OrderingConfig,
-                            ShardedAdaptiveFilter, paper_filters_4)
+    from repro.core import FilterPlan, OrderingConfig, build_session, \
+        paper_filters_4
     from repro.data.stream import gen_batch
 
     n_dev = jax.device_count()
@@ -163,15 +175,14 @@ def bench_scopes(args, results):
     cases = [("per_shard", "eager"), ("centralized", "eager"),
              ("centralized", "deferred"), ("centralized", "deferred-async")]
     for scope, exchange in cases:
-        cfg = AdaptiveFilterConfig(scope=scope, exchange=exchange,
-                                   ordering=ordering)
-        filt = ShardedAdaptiveFilter(paper_filters_4("fig1"), cfg, mesh=mesh)
-        state = filt.init_state()
-
-        def fn(s, c):
-            s2, mask, met = filt.jit_step(s, c)
-            return filt.maybe_exchange(s2), mask, met
-        sec = time_step(fn, state, cols, args.steps, thread_state=True)
+        session = build_session(FilterPlan(
+            predicates=paper_filters_4("fig1"), scope=scope,
+            exchange=exchange, ordering=ordering, shards=n_dev), mesh=mesh)
+        state = session.init_state()
+        # session.step drives the deferred exchange internally — no
+        # per-mode driving code in the bench anymore
+        sec = time_step(session.step, state, cols, args.steps,
+                        thread_state=True)
         us_row = sec * 1e6 / (rows * n_dev)
         tag = scope if exchange == "eager" else f"{scope}-{exchange}"
         name = f"ingest/sharded{n_dev}/{tag}"

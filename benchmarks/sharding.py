@@ -65,8 +65,8 @@ def main():
     import jax.numpy as jnp
     import numpy as np
 
-    from repro.core import (AdaptiveFilterConfig, OrderingConfig,
-                            ShardedAdaptiveFilter, paper_filters_4)
+    from repro.core import (FilterPlan, OrderingConfig, build_session,
+                            paper_filters_4)
     from repro.data.stream import DriftConfig, gen_batch
 
     shard_counts = [int(s) for s in args.shards.split(",") if s]
@@ -86,12 +86,14 @@ def main():
             for drift_kind in drifts:
                 drift = DriftConfig(kind=drift_kind,
                                     period_rows=args.batch_rows * 4)
-                cfg = AdaptiveFilterConfig(
-                    scope=scope, ordering=ordering,
-                    compact_output=args.compact)
-                filt = ShardedAdaptiveFilter(preds, cfg, mesh=mesh)
-                step = (filt.jit_step_compact if args.compact
-                        else filt.jit_step)
+                # explicit mesh: even shards=1 runs the live shard_map
+                # path, so s1 cells measure the same code as s2/s4
+                session = build_session(
+                    FilterPlan(predicates=preds, scope=scope,
+                               ordering=ordering, compact=args.compact,
+                               shards=n_shards),
+                    mesh=mesh)
+                step = session.step
 
                 # per-shard round-robin batches, like ShardedPipeline feeds;
                 # pre-generated and pre-transferred so the timed region
@@ -107,20 +109,18 @@ def main():
                 blocks = [block(i) for i in range(args.steps + 1)]
                 jax.block_until_ready(blocks)
 
-                state = filt.init_state()
-                out = step(state, blocks[0])         # compile + warm
-                state = out[0]
+                state = session.init_state()
+                state, res = step(state, blocks[0])  # compile + warm
                 jax.block_until_ready(state)
 
                 t0 = time.perf_counter()
                 for i in range(1, args.steps + 1):
-                    out = step(state, blocks[i])
-                    state = out[0]
+                    state, res = step(state, blocks[i])
                 jax.block_until_ready(state)
                 wall = time.perf_counter() - t0
 
                 us_per_call = wall * 1e6 / args.steps
-                metrics = out[-1]
+                metrics = res.metrics
                 rows_per_call = n_shards * args.batch_rows
                 us_per_mrow = wall * 1e6 / (args.steps * rows_per_call / 1e6)
                 name = f"sharding/s{n_shards}/{scope}/{drift_kind}" + (

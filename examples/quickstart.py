@@ -1,16 +1,15 @@
-"""Quickstart: adaptive filter ordering in 40 lines.
+"""Quickstart: one plan, one session, one step entry point.
 
     PYTHONPATH=src python examples/quickstart.py
 
-Builds the paper's 4-predicate chain over the synthetic drifting log stream,
-runs it adaptively, and prints how the evaluation order tracks the data.
+Declares the paper's 4-predicate chain as a ``FilterPlan``, compiles it to
+a ``FilterSession``, and streams the synthetic drifting log through the
+single ``session.step`` call — printing how the evaluation order tracks
+the data.
 """
 
-import jax
-import jax.numpy as jnp
-
-from repro.core import (AdaptiveFilter, AdaptiveFilterConfig, OrderingConfig,
-                        paper_filters_4)
+from repro.core import FilterPlan, OrderingConfig, build_session, \
+    paper_filters_4
 from repro.data.stream import DriftConfig, gen_batch
 
 
@@ -20,22 +19,26 @@ def main() -> None:
     for i, p in enumerate(preds):
         print(f"  [{i}] {p.describe()}")
 
-    filt = AdaptiveFilter(preds, AdaptiveFilterConfig(
+    # the plan is the WHOLE configuration surface (engine, scope, shards,
+    # compaction, exchange, tokenize all live here too — defaults shown)
+    plan = FilterPlan(
+        predicates=preds,
         ordering=OrderingConfig(collect_rate=1000, calculate_rate=250_000,
-                                momentum=0.3)))
-    state = filt.init_state()
-    step = jax.jit(filt.step)
+                                momentum=0.3))
+    session = build_session(plan)
+    state = session.init_state()
 
     drift = DriftConfig(kind="regime", period_rows=600_000, amplitude=1.8)
     print("\nstreaming 2M rows with regime drift:")
     for b in range(32):
-        cols = jnp.asarray(gen_batch(0, b, b * 65536, 65536, drift))
-        state, mask, m = step(state, cols)
+        cols = gen_batch(0, b, b * 65536, 65536, drift)
+        state, res = session.step(state, cols)
         if b % 4 == 3:
-            print(f"  rows={65536*(b+1):>9,}  epoch={int(m.epoch)}  "
-                  f"order={list(map(int, m.perm))}  "
-                  f"work/row={float(m.work_units)/65536:.2f}  "
-                  f"pass={int(m.n_pass)/65536:.3%}")
+            m = res.metrics_dict()
+            print(f"  rows={65536*(b+1):>9,}  epoch={m['epoch']}  "
+                  f"order={m['perm']}  "
+                  f"work/row={m['work_units']/65536:.2f}  "
+                  f"pass={m['n_pass']/65536:.3%}")
     print("\nranks (lower runs earlier):",
           [round(float(r), 3) for r in state.adj_rank])
 

@@ -5,14 +5,16 @@ reduced gemma2 config.
     PYTHONPATH=src python examples/serve_guardrail_filters.py
 """
 
+import os
 import sys
 
 from repro.launch import serve
 
 
 def main() -> None:
+    requests = os.environ.get("EXAMPLES_SMOKE_REQUESTS", "64")
     sys.argv = [sys.argv[0], "--arch", "gemma2-9b", "--smoke",
-                "--requests", "64", "--batch", "8",
+                "--requests", requests, "--batch", "8",
                 "--prompt-len", "64", "--new-tokens", "8"]
     serve.main()
 

@@ -3,33 +3,37 @@ work is compared against static orders (best/user/worst) and the
 clairvoyant per-batch oracle, for both the paper-faithful controller and
 the beyond-paper snap-on-flip variant (DESIGN §3, EXPERIMENTS §Perf).
 
+Every policy is ONE ``FilterPlan`` — adaptive vs static is the plan's
+``adaptive`` flag, a static order is just a reordered predicate chain —
+compiled to a session and driven through the same ``session.step``.
+
     PYTHONPATH=src python examples/streaming_drift_demo.py
 """
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+import os
 
-from repro.core import (AdaptiveFilter, AdaptiveFilterConfig, OrderingConfig,
-                        pack, paper_filters_4, static_filter)
+import jax.numpy as jnp
+
+from repro.core import FilterPlan, OrderingConfig, build_session, pack, \
+    paper_filters_4
 from repro.core.predicates import eval_all
 from repro.core.stats import expected_chain_cost
 from repro.data.stream import DriftConfig, gen_batch
 
-N_BATCHES = 60
+N_BATCHES = int(os.environ.get("EXAMPLES_SMOKE_BATCHES", "60"))
 DRIFT = DriftConfig(kind="regime", period_rows=1_500_000, amplitude=1.8)
 
 
-def run(filt):
-    state = filt.init_state()
-    step = jax.jit(filt.step)
+def run(plan: FilterPlan):
+    session = build_session(plan)
+    state = session.init_state()
     work = 0.0
     perms = []
     for b in range(N_BATCHES):
-        cols = jnp.asarray(gen_batch(0, b, b * 65536, 65536, DRIFT))
-        state, _, m = step(state, cols)
-        work += float(m.work_units)
-        perms.append(list(map(int, m.perm)))
+        cols = gen_batch(0, b, b * 65536, 65536, DRIFT)
+        state, res = session.step(state, cols)
+        work += float(res.metrics.work_units)
+        perms.append(list(map(int, res.metrics.perm)))
     return work, perms
 
 
@@ -43,12 +47,11 @@ def main() -> None:
     snap = OrderingConfig(collect_rate=500, calculate_rate=100_000,
                           momentum=0.3, snap_threshold=1.3)
 
-    w_paper, perms = run(AdaptiveFilter(
-        preds, AdaptiveFilterConfig(ordering=ordering)))
-    w_snap, _ = run(AdaptiveFilter(
-        preds, AdaptiveFilterConfig(ordering=snap)))
-    w_user, _ = run(static_filter(preds))
-    w_worst, _ = run(static_filter(preds, order=[3, 2, 1, 0]))
+    w_paper, perms = run(FilterPlan(predicates=preds, ordering=ordering))
+    w_snap, _ = run(FilterPlan(predicates=preds, ordering=snap))
+    w_user, _ = run(FilterPlan(predicates=preds, adaptive=False))
+    w_worst, _ = run(FilterPlan(predicates=[preds[i] for i in (3, 2, 1, 0)],
+                                adaptive=False))
 
     # clairvoyant oracle: best order for each batch's true selectivities
     w_oracle = 0.0

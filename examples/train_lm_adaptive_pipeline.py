@@ -1,5 +1,6 @@
 """End-to-end driver (deliverable b): train a reduced LM for a few hundred
-steps on CPU, fed by the adaptive-filter ingestion pipeline, with
+steps on CPU, fed by the adaptive-filter ingestion pipeline (declared as
+one ``FilterPlan``, compiled by ``build_session``), with
 checkpoint/restart.
 
     PYTHONPATH=src python examples/train_lm_adaptive_pipeline.py
@@ -7,16 +8,21 @@ checkpoint/restart.
 Equivalent CLI (any of the 10 archs, full configs on real hardware):
     PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-14b --smoke \
         --steps 300 --batch 8 --seq 256
+
+``EXAMPLES_SMOKE_STEPS`` shrinks the run (the CI examples-smoke job sets
+it so every example stays minutes-cheap).
 """
 
+import os
 import sys
 
 from repro.launch import train
 
 
 def main() -> None:
+    steps = os.environ.get("EXAMPLES_SMOKE_STEPS", "300")
     sys.argv = [sys.argv[0], "--arch", "qwen2.5-14b", "--smoke",
-                "--steps", "300", "--batch", "8", "--seq", "256",
+                "--steps", steps, "--batch", "8", "--seq", "256",
                 "--ckpt-dir", "/tmp/repro_quickstart_ckpt"]
     train.main()
 

@@ -1,13 +1,20 @@
 """Adaptive filter ordering — the paper's contribution, as a JAX module.
 
-Public API:
+Public API (one plan, one session):
+  FilterPlan, TokenizeSpec         — THE declarative config surface
+                                     (engine × scope × shards × compaction
+                                     × exchange × tokenize, validated once)
+  build_session → FilterSession    — compiled plan; one ``session.step``
+                                     returning the uniform StepResult ABI,
+                                     versioned elastic checkpoints
   Predicate, pack, OP_*            — predicate algebra (CNF via ``group``)
   OrderingConfig, OrderState       — Table-1 parameters + adaptive state
-  AdaptiveFilter, AdaptiveFilterConfig, static_filter — the operator
-  ShardedAdaptiveFilter            — the operator under shard_map (data mesh)
   Scope, EXCHANGE_MODES            — per_batch / per_shard / centralized +
                                      eager / deferred / deferred-async
   engine (get_engine/register)     — pluggable execution backends
+  AdaptiveFilter, ShardedAdaptiveFilter, static_filter — the functional
+                                     step math sessions compile (legacy
+                                     step_compact surfaces are shims)
 """
 
 from repro.core.adaptive_filter import (AdaptiveFilter, AdaptiveFilterConfig,
@@ -15,15 +22,19 @@ from repro.core.adaptive_filter import (AdaptiveFilter, AdaptiveFilterConfig,
 from repro.core.engine import (ChainResult, FilterEngine, MonitorSpec,
                                available_engines, get_engine)
 from repro.core.ordering import OrderingConfig, OrderState, init_order_state
+from repro.core.plan import FilterPlan, TokenizeSpec
 from repro.core.predicates import (OP_BETWEEN, OP_EQ, OP_GT, OP_HASHMIX,
                                    OP_LT, Predicate, PredicateSpecs, pack,
                                    paper_filters_4, paper_filters_cnf)
 from repro.core.scope import EXCHANGE_MODES, Scope
+from repro.core.session import FilterSession, StepResult, build_session
 from repro.core.sharded import (ShardedAdaptiveFilter, shard_slice,
                                 stack_states)
 from repro.core.stats import FilterStats
 
 __all__ = [
+    "FilterPlan", "TokenizeSpec", "FilterSession", "StepResult",
+    "build_session",
     "AdaptiveFilter", "AdaptiveFilterConfig", "StepMetrics", "static_filter",
     "ShardedAdaptiveFilter", "shard_slice", "stack_states",
     "ChainResult", "FilterEngine", "MonitorSpec", "available_engines",

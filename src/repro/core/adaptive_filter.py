@@ -1,9 +1,13 @@
-"""The user-facing adaptive filter operator — a thin orchestrator.
+"""The adaptive filter operator: the functional step math.
 
 This is the framework's analogue of the paper's Catalyst extension: a
 pipeline stage that can replace any static conjunctive (or CNF) filter.
-Plug it into ``repro.data.pipeline.Pipeline`` (ingestion for training) or
-call ``step``/``process_stream`` directly (serving guardrails, benchmarks).
+The USER-FACING surface is the plan/session API (``core.plan.FilterPlan``
+→ ``core.session.build_session`` → one ``session.step``); this class is
+the math core a session compiles — ``step``/``_step_compact`` are pure
+functions of (state, batch) traced under jit/shard_map, and the legacy
+conveniences here (``step_compact``, ``jit_step_compact``) are thin
+deprecated shims over it.
 
 All execution semantics live behind the ``FilterEngine`` registry
 (``core/engine/``) and all ordering math in ``core.ordering`` /
@@ -40,13 +44,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import engine as engine_lib
 from repro.core import ordering as ordering_lib
 from repro.core import predicates as pred_lib
 from repro.core.engine import MonitorSpec, get_engine
 from repro.core.ordering import OrderingConfig, OrderState
-from repro.core.scope import (EXCHANGE_MODES, Scope, reduce_stats,
-                              scope_from_str)
+from repro.core.plan import validate_combo, warn_deprecated
+from repro.core.scope import Scope, reduce_stats, scope_from_str
 from repro.core.predicates import Predicate
 from repro.core.stats import FilterStats
 
@@ -103,40 +106,15 @@ class AdaptiveFilterConfig:
     exchange: str = "eager"
 
     def __post_init__(self) -> None:
-        scope_from_str(self.scope)
-        if self.cost_mode not in ("static", "measured"):
-            raise ValueError(f"bad cost_mode {self.cost_mode}")
-        if self.backend not in engine_lib.available_engines():
-            raise ValueError(
-                f"bad backend {self.backend}; registered engines: "
-                f"{engine_lib.available_engines()}")
-        if self.cost_mode == "measured" and self.backend != "numpy":
-            raise ValueError("measured cost mode needs the host (numpy) backend")
-        if self.compact_output and not get_engine(self.backend).traceable:
-            raise ValueError(
-                "compact_output is the device-side gather; the host "
-                f"engine {self.backend!r} already emits compacted rows "
-                "(boolean-index short-circuit) — drop the flag")
-        if self.compact_capacity is not None:
-            if not self.compact_output:
-                raise ValueError("compact_capacity needs compact_output=True")
-            if isinstance(self.compact_capacity, str):
-                if self.compact_capacity != "auto":
-                    raise ValueError(
-                        f"compact_capacity {self.compact_capacity!r}: pass "
-                        "an int, None (batch width), or 'auto'")
-            elif self.compact_capacity < 1:
-                raise ValueError("compact_capacity must be >= 1")
-        if self.compact_slack < 1.0:
-            raise ValueError("compact_slack must be >= 1.0 (headroom factor)")
-        if self.exchange not in EXCHANGE_MODES:
-            raise ValueError(
-                f"bad exchange {self.exchange!r}; pick from {EXCHANGE_MODES}")
-        if self.exchange != "eager" and self.scope != "centralized":
-            raise ValueError(
-                "deferred exchange only changes the CENTRALIZED scope's "
-                f"collective cadence; scope {self.scope!r} never exchanges "
-                "— drop the flag")
+        # every cross-field rule lives in ONE place: core.plan.validate_combo
+        # (the FilterPlan docstring is the single source of truth for valid
+        # combinations; this config is the legacy per-filter surface).
+        validate_combo(scope=self.scope, cost_mode=self.cost_mode,
+                       backend=self.backend,
+                       compact_output=self.compact_output,
+                       compact_capacity=self.compact_capacity,
+                       compact_slack=self.compact_slack,
+                       exchange=self.exchange)
 
 
 class StepMetrics(NamedTuple):
@@ -192,14 +170,28 @@ class AdaptiveFilter:
         return self._jit_step
 
     @property
-    def jit_step_compact(self):
-        """Jitted ``step_compact``; ``capacity`` is static (one compile per
+    def _jit_compact(self):
+        """Jitted ``_step_compact``; ``capacity`` is static (one compile per
         distinct quantized width — auto mode changes it only at epoch
         boundaries, in multiples of 128)."""
         if self._jit_step_compact is None:
             self._jit_step_compact = jax.jit(
-                self.step_compact, static_argnames=("capacity",))
+                self._step_compact, static_argnames=("capacity",))
         return self._jit_step_compact
+
+    @property
+    def jit_step_compact(self):
+        """Deprecated: use ``build_session(plan).step`` (one entry point).
+
+        Kept as a delegating shim so pinned parity tests and out-of-tree
+        callers keep working; emits a DeprecationWarning once.
+        """
+        warn_deprecated(
+            "AdaptiveFilter.jit_step_compact",
+            "AdaptiveFilter.jit_step_compact is deprecated; declare "
+            "compact=True on a FilterPlan and call session.step "
+            "(see README 'One plan, one session')")
+        return self._jit_compact
 
     # ----------------------------------------------------------- jit'd step
     def _advance_state(self, state: OrderState, res, costs,
@@ -270,6 +262,22 @@ class AdaptiveFilter:
     def step_compact(self, state: OrderState, columns: jnp.ndarray,
                      measured_costs: jnp.ndarray | None = None,
                      *, capacity: int | None = None):
+        """Deprecated: use ``build_session(plan).step`` (one entry point).
+
+        Thin delegating shim over the internal ``_step_compact``; emits a
+        DeprecationWarning once. See the README migration table.
+        """
+        warn_deprecated(
+            "AdaptiveFilter.step_compact",
+            "AdaptiveFilter.step_compact is deprecated; declare "
+            "compact=True on a FilterPlan and call session.step "
+            "(see README 'One plan, one session')")
+        return self._step_compact(state, columns, measured_costs,
+                                  capacity=capacity)
+
+    def _step_compact(self, state: OrderState, columns: jnp.ndarray,
+                      measured_costs: jnp.ndarray | None = None,
+                      *, capacity: int | None = None):
         """``step`` + single-pass device-side survivor compaction.
 
         Returns (new_state, packed f32[C, cap], n_kept i32[], mask bool[R],
@@ -416,37 +424,19 @@ class AdaptiveFilter:
             yield from self._process_stream_host(batches)
             return
 
-        state = self.init_state()
+        # the session owns ALL of the driving (jit dispatch, capacity
+        # resolution, deferred exchange, auto-retune, overflow warning,
+        # metrics encoding) — this loop is a thin host iterator over it.
+        # A FRESH session per invocation: each drives exactly one state
+        # stream (its deferred-boundary row counter must not be shared
+        # with a pipeline or another stream over the same filter; the jit
+        # caches live on the filter and stay shared).
+        from repro.core.session import FilterSession
+        session = FilterSession.from_filter(self)
+        state = session.init_state()
         for batch in batches:
-            cols = jnp.asarray(batch, jnp.float32)
-            prev = state
-            n_dropped = 0
-            if self.config.compact_output:
-                cap = self.resolve_capacity(int(cols.shape[1]))
-                state, packed, n_kept, mask, metrics = self.jit_step_compact(
-                    state, cols, capacity=cap)
-                survivors = np.asarray(packed)[:, :int(n_kept)]
-                n_dropped = int(metrics.n_dropped)
-                if n_dropped:
-                    log.warning(
-                        "compaction overflow: %d survivors dropped "
-                        "(capacity %d); raise compact_capacity or use "
-                        "'auto'", n_dropped, cap)
-            else:
-                state, mask, metrics = self.jit_step(state, cols)
-                survivors = None
-            state = self.maybe_exchange(state)
-            self.observe_for_capacity(prev, state, int(cols.shape[1]))
-            mask_np = np.asarray(mask)
-            if survivors is None:
-                survivors = batch[:, mask_np]
-            yield survivors, mask_np, {
-                "work_units": float(metrics.work_units),
-                "n_pass": int(metrics.n_pass),
-                "perm": np.asarray(metrics.perm).tolist(),
-                "epoch": int(np.max(np.asarray(state.epoch))),
-                "n_dropped": n_dropped,
-            }
+            state, res = session.step(state, batch)
+            yield res.survivors(batch), res.mask_np, res.metrics_dict()
 
     def _process_stream_host(self, batches):
         """Host streaming loop: SAME ordering math as the jitted step, run

@@ -1,0 +1,212 @@
+"""FilterPlan: the one declarative description of an adaptive-filter stage.
+
+The paper's thesis is that adaptive reordering should be a property of the
+execution engine, not something the user wires by hand. A ``FilterPlan``
+is therefore the *whole* user-facing configuration surface — chain, engine,
+scope, shard count, compaction, exchange cadence, and device tokenization —
+validated once, here, with every cross-field rule in one place. Compiling a
+plan (``repro.core.session.build_session``) yields a ``FilterSession`` with
+exactly one ``step`` entry point; nothing downstream re-checks combinations.
+
+Valid field combinations (the single source of truth):
+
+  engine      any registered engine name ("jnp", "pallas", "numpy", ...).
+              Host (non-traceable) engines stream via
+              ``AdaptiveFilter.process_stream``; a session's jitted step
+              falls back to the jnp reference engine for them.
+  cost_mode   "static" works everywhere; "measured" (host wall clocks)
+              needs the numpy engine.
+  scope       "per_shard" | "centralized" | "per_batch" (paper §2.2).
+  shards      1 = single executor; > 1 runs the step under ``shard_map``
+              over a data mesh axis (needs a traceable engine and that
+              many visible devices).
+  compact     device-side survivor compaction (padded [.., C, cap] gather
+              + count). Needs a traceable engine — host engines already
+              emit compacted rows.
+  capacity    only with ``compact``: None (batch width, lossless), an
+              int >= 1 (fixed width; overflow is counted + warned), or
+              "auto" (tracks the monitor lane's pass-rate × ``slack``,
+              re-quantized to 128s at epoch boundaries).
+  slack       >= 1.0; headroom factor for "auto" capacity.
+  exchange    "eager" | "deferred" | "deferred-async"; anything but
+              "eager" requires scope="centralized" (other scopes never
+              exchange statistics).
+  tokenize    TokenizeSpec(vocab_size, tokens_per_row) to hash+pack the
+              survivors on device; requires ``compact`` (it consumes the
+              padded buffers) and vocab_size < 2**24 (u32-limb modulo).
+
+Two plans are checkpoint-compatible iff their *fingerprints* match: the
+fingerprint hashes the semantic identity of the adaptive state (predicate
+chain, ordering config, scope, adaptivity, cost mode) and deliberately
+excludes execution details (engine, shard count, compaction, exchange,
+tokenize) — so a checkpoint moves freely across engines and shard counts
+(elastic reshard) but refuses to load into a session whose ordering math
+would disagree with the one that wrote it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import warnings
+from typing import Sequence
+
+from repro.core import engine as engine_lib
+from repro.core.engine import get_engine
+from repro.core.ordering import OrderingConfig
+from repro.core.predicates import Predicate
+from repro.core.scope import EXCHANGE_MODES, scope_from_str
+
+#: vocab ceiling of the u32-limb device tokenizer's byte-fold modulo —
+#: THE definition (``repro.data.tokenizer`` imports it lazily; it lives
+#: here because the plan layer must validate it without importing jax)
+MAX_DEVICE_VOCAB = 1 << 24
+
+
+# ------------------------------------------------------------- deprecation
+_WARNED: set[str] = set()
+
+
+def warn_deprecated(key: str, message: str) -> None:
+    """Emit ``message`` as a DeprecationWarning once per process per key.
+
+    Messages carry a ``repro:`` prefix so CI can promote exactly THIS
+    package's deprecations to errors (``-W "error:repro:DeprecationWarning"``
+    matches on the message prefix) without flaking on third-party
+    DeprecationWarnings from jax/numpy releases.
+    """
+    if key in _WARNED:
+        return
+    _WARNED.add(key)
+    warnings.warn(f"repro: {message}", DeprecationWarning, stacklevel=3)
+
+
+# ------------------------------------------------------ cross-field rules
+def validate_combo(*, scope: str, cost_mode: str, backend: str,
+                   compact_output: bool, compact_capacity,
+                   compact_slack: float, exchange: str, shards: int = 1,
+                   device_tokenize: bool = False) -> None:
+    """THE cross-field validation for every engine × scope × compaction ×
+    exchange × tokenize combination.
+
+    ``AdaptiveFilterConfig``, ``ShardedAdaptiveFilter``, the pipelines, and
+    ``FilterPlan`` all funnel through here, so the rules cannot drift.
+    """
+    scope_from_str(scope)
+    if cost_mode not in ("static", "measured"):
+        raise ValueError(f"bad cost_mode {cost_mode}")
+    if backend not in engine_lib.available_engines():
+        raise ValueError(
+            f"bad backend {backend}; registered engines: "
+            f"{engine_lib.available_engines()}")
+    if cost_mode == "measured" and backend != "numpy":
+        raise ValueError("measured cost mode needs the host (numpy) backend")
+    if shards < 1:
+        raise ValueError(f"shards must be >= 1, got {shards}")
+    if shards > 1 and not get_engine(backend).traceable:
+        raise ValueError(
+            f"backend {backend!r} is a host engine; the sharded "
+            "filter needs a traceable engine (jnp / pallas)")
+    if compact_output and not get_engine(backend).traceable:
+        raise ValueError(
+            "compact_output is the device-side gather; the host "
+            f"engine {backend!r} already emits compacted rows "
+            "(boolean-index short-circuit) — drop the flag")
+    if compact_capacity is not None:
+        if not compact_output:
+            raise ValueError("compact_capacity needs compact_output=True")
+        if isinstance(compact_capacity, str):
+            if compact_capacity != "auto":
+                raise ValueError(
+                    f"compact_capacity {compact_capacity!r}: pass "
+                    "an int, None (batch width), or 'auto'")
+        elif compact_capacity < 1:
+            raise ValueError("compact_capacity must be >= 1")
+    if compact_slack < 1.0:
+        raise ValueError("compact_slack must be >= 1.0 (headroom factor)")
+    if exchange not in EXCHANGE_MODES:
+        raise ValueError(
+            f"bad exchange {exchange!r}; pick from {EXCHANGE_MODES}")
+    if exchange != "eager" and scope != "centralized":
+        raise ValueError(
+            "deferred exchange only changes the CENTRALIZED scope's "
+            f"collective cadence; scope {scope!r} never exchanges "
+            "— drop the flag")
+    if device_tokenize and not compact_output:
+        raise ValueError("device_tokenize consumes the padded compacted "
+                         "buffers — it needs compact_output=True")
+
+
+# ----------------------------------------------------------------- the plan
+@dataclasses.dataclass(frozen=True)
+class TokenizeSpec:
+    """On-device tokenize/pack stage appended to the compacted survivors."""
+
+    vocab_size: int
+    tokens_per_row: int = 8
+
+    def __post_init__(self) -> None:
+        if not 1 <= self.vocab_size < MAX_DEVICE_VOCAB:
+            raise ValueError(
+                f"tokenize vocab_size must be in [1, {MAX_DEVICE_VOCAB}) "
+                f"(u32-limb modulo), got {self.vocab_size}")
+        if self.tokens_per_row < 1:
+            raise ValueError("tokens_per_row must be >= 1")
+
+
+@dataclasses.dataclass(frozen=True)
+class FilterPlan:
+    """Declarative adaptive-filter stage; see the module docstring for the
+    full table of valid field combinations (this class IS the single source
+    of truth — everything else delegates its validation here).
+
+    Compile with ``repro.core.session.build_session(plan, mesh=None)``.
+    """
+
+    predicates: Sequence[Predicate]      # the chain (CNF via Predicate.group)
+    ordering: OrderingConfig = OrderingConfig()
+    engine: str = "jnp"
+    scope: str = "per_shard"
+    shards: int = 1
+    axis_name: str = "data"
+    adaptive: bool = True
+    cost_mode: str = "static"
+    compact: bool = False
+    capacity: int | str | None = None    # None | int | "auto"
+    slack: float = 1.5
+    exchange: str = "eager"
+    tokenize: TokenizeSpec | None = None
+
+    def __post_init__(self) -> None:
+        object.__setattr__(self, "predicates", tuple(self.predicates))
+        if not self.predicates:
+            raise ValueError("need at least one predicate")
+        validate_combo(scope=self.scope, cost_mode=self.cost_mode,
+                       backend=self.engine, compact_output=self.compact,
+                       compact_capacity=self.capacity,
+                       compact_slack=self.slack, exchange=self.exchange,
+                       shards=self.shards,
+                       device_tokenize=self.tokenize is not None)
+
+    # ------------------------------------------------------------ identity
+    def fingerprint(self) -> str:
+        """Semantic identity of the adaptive state this plan produces.
+
+        Covers the chain, the ordering config, scope, adaptivity, and cost
+        mode; excludes engine / shards / compaction / exchange / tokenize
+        (execution details a checkpoint is portable across — shard count
+        explicitly so, that is what elastic reshard is).
+        """
+        payload = {
+            "predicates": [
+                (p.name, p.column, p.op, p.t1, p.t2, p.rounds,
+                 p.static_cost, None if p.group is None else str(p.group))
+                for p in self.predicates],
+            "ordering": dataclasses.asdict(self.ordering),
+            "scope": self.scope,
+            "adaptive": self.adaptive,
+            "cost_mode": self.cost_mode,
+        }
+        blob = json.dumps(payload, sort_keys=True).encode()
+        return hashlib.sha256(blob).hexdigest()[:16]

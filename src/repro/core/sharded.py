@@ -56,6 +56,7 @@ from repro.compat import shard_map
 from repro.core.adaptive_filter import (AdaptiveFilter, AdaptiveFilterConfig,
                                         drive_exchange)
 from repro.core.ordering import OrderState
+from repro.core.plan import validate_combo, warn_deprecated
 from repro.core.predicates import Predicate
 
 
@@ -85,10 +86,6 @@ class ShardedAdaptiveFilter:
                  axis_name: str = "data"):
         cfg = config or AdaptiveFilterConfig()
         self.inner = AdaptiveFilter(predicates, cfg, axis_names=(axis_name,))
-        if not self.inner._engine.traceable:
-            raise ValueError(
-                f"backend {cfg.backend!r} is a host engine; the sharded "
-                "filter needs a traceable engine (jnp / pallas)")
         if mesh is None:
             mesh = jax.make_mesh((jax.device_count(),), (axis_name,))
         if axis_name not in mesh.axis_names:
@@ -98,6 +95,16 @@ class ShardedAdaptiveFilter:
         self.mesh = mesh
         self.axis_name = axis_name
         self.num_shards = int(mesh.shape[axis_name])
+        # the sharded-execution rules live with every other cross-field
+        # rule in core.plan.validate_combo (single source of truth); the
+        # sharded filter is the shards>=1-under-shard_map case
+        validate_combo(scope=cfg.scope, cost_mode=cfg.cost_mode,
+                       backend=cfg.backend,
+                       compact_output=cfg.compact_output,
+                       compact_capacity=cfg.compact_capacity,
+                       compact_slack=cfg.compact_slack,
+                       exchange=cfg.exchange,
+                       shards=max(self.num_shards, 2))
         self._jit_step = None
         self._jit_step_compact = None
         self._jit_exchange = None
@@ -144,7 +151,7 @@ class ShardedAdaptiveFilter:
 
         def local(st, cols):
             st = shard_slice(st, 0)
-            new_st, packed, n_kept, mask, metrics = self.inner.step_compact(
+            new_st, packed, n_kept, mask, metrics = self.inner._step_compact(
                 st, cols, capacity=capacity)
             return (jax.tree.map(lambda x: x[None], new_st), packed[None],
                     n_kept[None], mask, jax.tree.map(lambda x: x[None],
@@ -161,11 +168,21 @@ class ShardedAdaptiveFilter:
         return self._jit_step
 
     @property
-    def jit_step_compact(self):
+    def _jit_compact(self):
         if self._jit_step_compact is None:
             self._jit_step_compact = jax.jit(
                 self.sharded_step_compact, static_argnames=("capacity",))
         return self._jit_step_compact
+
+    @property
+    def jit_step_compact(self):
+        """Deprecated: use ``build_session(plan).step`` (one entry point)."""
+        warn_deprecated(
+            "ShardedAdaptiveFilter.jit_step_compact",
+            "ShardedAdaptiveFilter.jit_step_compact is deprecated; declare "
+            "compact=True (and shards=N) on a FilterPlan and call "
+            "session.step (see README 'One plan, one session')")
+        return self._jit_compact
 
     # ------------------------------------------------------ deferred epochs
     def _sharded_exchange(self, state: OrderState, use_stats=None):

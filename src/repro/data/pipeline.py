@@ -6,15 +6,20 @@ the filter stage is an ``AdaptiveFilter`` (or a static one — drop-in), its
 restarts, per DESIGN §6), and every host/shard runs its own instance — the
 paper's per-executor scope by construction.
 
-Two deployment shapes:
+Two deployment shapes, both thin iterators over ONE ``FilterSession``
+(``make_pipeline(build_session(plan), ...)`` picks the right one):
 
-  ``Pipeline``        — one stream, one filter instance (one host process =
-                        one executor; run N processes for N executors).
+  ``Pipeline``        — one stream, one session (one host process = one
+                        executor; run N processes for N executors).
   ``ShardedPipeline`` — one process drives a whole data mesh: S per-shard
-                        ``LogStream``s feed ONE ``ShardedAdaptiveFilter``
-                        step per iteration (shard_map over the mesh's data
-                        axis, per-shard OrderState, scope-controlled stat
+                        ``LogStream``s feed ONE sharded session step per
+                        iteration (shard_map over the mesh's data axis,
+                        per-shard OrderState, scope-controlled stat
                         exchange — see ``core.sharded``).
+
+All per-step driving — capacity resolution, deferred exchange, auto
+retune, overflow warnings, metrics — lives in ``FilterSession.step``; the
+pipelines only assemble batches and emit fixed-shape LM examples.
 
 Both emit fixed-shape LM batches {"tokens": i32[B, S], "labels": i32[B, S]}
 ready for ``train_step``, checkpoint/restore bit-identically (the
@@ -41,10 +46,36 @@ import numpy as np
 
 log = logging.getLogger(__name__)
 
-from repro.core.adaptive_filter import AdaptiveFilter
-from repro.core.sharded import ShardedAdaptiveFilter
+from repro.core.plan import TokenizeSpec, warn_deprecated
 from repro.data import tokenizer
 from repro.data.stream import LogStream
+
+
+def _as_session(filt, device_tokenize: bool, vocab_size: int,
+                tokens_per_row: int):
+    """Normalize a pipeline's filter argument to ONE ``FilterSession``.
+
+    Accepts a ``FilterSession`` (the plan-first path) or a legacy
+    ``AdaptiveFilter`` / ``ShardedAdaptiveFilter`` instance (adopted under a
+    synthesized plan). Returns (session, device_tokenize) with the tokenize
+    stage attached to the session when requested — all combination
+    validation happens in ``FilterPlan``, not here.
+    """
+    from repro.core.session import FilterSession
+
+    session = filt if isinstance(filt, FilterSession) \
+        else FilterSession.from_filter(filt)
+    spec = session.plan.tokenize
+    if spec is None and device_tokenize:
+        spec = TokenizeSpec(vocab_size, tokens_per_row)
+        session = session.with_tokenize(spec)
+    if spec is not None and (spec.vocab_size != vocab_size
+                             or spec.tokens_per_row != tokens_per_row):
+        raise ValueError(
+            f"pipeline tokenize params (vocab={vocab_size}, "
+            f"tokens_per_row={tokens_per_row}) disagree with the plan's "
+            f"TokenizeSpec {spec}")
+    return session, spec is not None
 
 
 def fstate_to_arrays(fstate) -> dict:
@@ -92,7 +123,8 @@ def fstate_from_arrays(fs: dict):
 @dataclasses.dataclass
 class PipelineState:
     stream_cursor: int
-    filter_state: dict          # OrderState as numpy arrays
+    filter_state: dict          # versioned session blob (schema v2);
+                                # pre-session raw-array (v1) dicts restore too
     buffer: np.ndarray          # leftover tokens not yet emitted
     batches_emitted: int
     rows_in: int
@@ -100,10 +132,10 @@ class PipelineState:
 
 
 class _LMBatchEmitter:
-    """Shared tokenize-buffer-emit tail of both pipelines.
+    """Shared session-step + tokenize-buffer-emit tail of both pipelines.
 
     Expects ``batch_size``, ``seq_len``, ``vocab_size``, ``tokens_per_row``,
-    ``_buffer``, and ``batches_emitted`` on self.
+    ``_session``, ``_fstate``, ``_buffer``, and ``batches_emitted`` on self.
     """
 
     def _emit_tokens(self, toks: np.ndarray) -> Iterator[dict]:
@@ -120,32 +152,37 @@ class _LMBatchEmitter:
         yield from self._emit_tokens(tokenizer.rows_to_tokens(
             survivors, self.vocab_size, self.tokens_per_row))
 
-    def _warn_dropped(self, n_dropped: int) -> None:
-        if n_dropped:
-            log.warning(
-                "compaction overflow: %d survivors dropped this step "
-                "(compact_capacity too small — raise it or use 'auto')",
-                n_dropped)
+    def _filter_step(self, columns: np.ndarray):
+        """ONE session step; returns (payload, n_pass).
+
+        ``payload`` is the dense token stream under device tokenization
+        (the rows never come back to the host), otherwise the surviving
+        rows (sliced from the packed device buffer under compaction, a host
+        boolean index otherwise). All driving — capacity resolution,
+        deferred exchange, auto retune, overflow warning, metrics — is the
+        session's; ``last_metrics`` is its uniform JSON encoding, with
+        per-shard ``n_dropped`` alongside the sum for sharded sessions.
+        """
+        self._fstate, res = self._session.step(self._fstate, columns)
+        self.last_metrics = res.metrics_dict()
+        if self._device_tokenize:
+            return res.host_tokens(), res.n_pass
+        return res.survivors(columns), res.n_pass
 
 
 class Pipeline(_LMBatchEmitter):
-    def __init__(self, stream: LogStream, filt: AdaptiveFilter,
+    def __init__(self, stream: LogStream, filt,
                  batch_size: int, seq_len: int, vocab_size: int,
                  tokens_per_row: int = 8, device_tokenize: bool = False):
         self.stream = stream
-        self.filt = filt
+        self._session, self._device_tokenize = _as_session(
+            filt, device_tokenize, vocab_size, tokens_per_row)
+        self.filt = self._session.filter
         self.batch_size = batch_size
         self.seq_len = seq_len
         self.vocab_size = vocab_size
         self.tokens_per_row = tokens_per_row
-        self._compact = filt.config.compact_output
-        if device_tokenize and not self._compact:
-            raise ValueError("device_tokenize consumes the padded compacted "
-                             "buffers — it needs compact_output=True")
-        self._device_tokenize = device_tokenize
-        self._jit_step = filt.jit_step_compact if self._compact \
-            else filt.jit_step               # compiled once per filter
-        self._fstate = filt.init_state()
+        self._fstate = self._session.init_state()
         self._buffer = np.zeros((0,), np.int32)
         self.batches_emitted = 0
         self.rows_in = 0
@@ -156,7 +193,7 @@ class Pipeline(_LMBatchEmitter):
     def state(self) -> PipelineState:
         return PipelineState(
             stream_cursor=self.stream.cursor,
-            filter_state=fstate_to_arrays(self._fstate),
+            filter_state=self._session.save_state(self._fstate),
             buffer=self._buffer.copy(),
             batches_emitted=self.batches_emitted,
             rows_in=self.rows_in,
@@ -165,60 +202,16 @@ class Pipeline(_LMBatchEmitter):
 
     def restore(self, st: PipelineState) -> None:
         self.stream.cursor = st.stream_cursor
-        self._fstate = fstate_from_arrays(st.filter_state)
+        self._fstate = self._session.restore_state(st.filter_state)
         self._buffer = st.buffer.copy()
         self.batches_emitted = st.batches_emitted
         self.rows_in = st.rows_in
         self.rows_pass = st.rows_pass
 
     # -------------------------------------------------------------- iteration
-    def _filter_batch(self, columns: np.ndarray):
-        """Run one jitted filter step; returns (survivors | device tokens,
-        n_pass).
-
-        ``n_pass`` counts the survivors actually KEPT (and tokenized): under
-        a saturating ``compact_capacity`` that is ``n_kept``, not the mask
-        popcount — ``rows_pass`` must agree with the emitted token stream.
-        With ``device_tokenize`` the first element is the packed token
-        stream instead of survivor columns (the batch never comes back to
-        the host as rows at all).
-        """
-        import jax.numpy as jnp
-
-        cols = jnp.asarray(columns, jnp.float32)
-        n_rows = int(cols.shape[1])
-        prev = self._fstate
-        if self._compact:
-            cap = self.filt.resolve_capacity(n_rows)
-            self._fstate, packed, n_kept, _, metrics = self._jit_step(
-                self._fstate, cols, capacity=cap)
-            if self._device_tokenize:
-                toks, n_tok = tokenizer.tokens_from_padded(
-                    packed, n_kept, self.vocab_size, self.tokens_per_row)
-                payload = np.asarray(toks)[:int(n_tok)]
-            else:
-                payload = np.asarray(packed)[:, :int(n_kept)]
-            n_pass = int(n_kept)
-        else:
-            self._fstate, mask, metrics = self._jit_step(self._fstate, cols)
-            mask_np = np.asarray(mask)
-            payload = columns[:, mask_np]
-            n_pass = int(mask_np.sum())
-        self._fstate = self.filt.maybe_exchange(self._fstate)
-        self.filt.observe_for_capacity(prev, self._fstate, n_rows)
-        n_dropped = int(np.asarray(metrics.n_dropped))
-        self._warn_dropped(n_dropped)
-        self.last_metrics = {
-            "work_units": float(metrics.work_units),
-            "perm": np.asarray(metrics.perm).tolist(),
-            "epoch": int(np.max(np.asarray(self._fstate.epoch))),
-            "n_dropped": n_dropped,
-        }
-        return payload, n_pass
-
     def __iter__(self) -> Iterator[dict]:
         for rb in self.stream:
-            payload, n_pass = self._filter_batch(rb.columns)
+            payload, n_pass = self._filter_step(rb.columns)
             self.rows_in += rb.n_rows
             self.rows_pass += n_pass
             if self._device_tokenize:
@@ -231,7 +224,8 @@ class Pipeline(_LMBatchEmitter):
 @dataclasses.dataclass
 class ShardedPipelineState:
     stream_cursors: list        # one LogStream cursor per shard
-    filter_state: dict          # stacked OrderState ([S, ...] leaves)
+    filter_state: dict          # versioned session blob (v2; stacked
+                                # [S, ...] arrays inside), v1 loads too
     buffer: np.ndarray
     batches_emitted: int
     rows_in: int
@@ -251,27 +245,22 @@ class ShardedPipeline(_LMBatchEmitter):
     shard's adaptive ranks survive a restart.
     """
 
-    def __init__(self, streams: Sequence[LogStream],
-                 filt: ShardedAdaptiveFilter, batch_size: int, seq_len: int,
+    def __init__(self, streams: Sequence[LogStream], filt,
+                 batch_size: int, seq_len: int,
                  vocab_size: int, tokens_per_row: int = 8,
                  device_tokenize: bool = False):
-        if len(streams) != filt.num_shards:
-            raise ValueError(
-                f"{len(streams)} streams for {filt.num_shards} shards")
+        self._session, self._device_tokenize = _as_session(
+            filt, device_tokenize, vocab_size, tokens_per_row)
+        self.filt = self._session.filter
+        if len(streams) != self._session.num_shards:
+            raise ValueError(f"{len(streams)} streams for "
+                             f"{self._session.num_shards} shards")
         self.streams = list(streams)
-        self.filt = filt
         self.batch_size = batch_size
         self.seq_len = seq_len
         self.vocab_size = vocab_size
         self.tokens_per_row = tokens_per_row
-        self._compact = filt.config.compact_output
-        if device_tokenize and not self._compact:
-            raise ValueError("device_tokenize consumes the padded compacted "
-                             "buffers — it needs compact_output=True")
-        self._device_tokenize = device_tokenize
-        self._jit_step = filt.jit_step_compact if self._compact \
-            else filt.jit_step
-        self._fstate = filt.init_state()
+        self._fstate = self._session.init_state()
         self._buffer = np.zeros((0,), np.int32)
         self.batches_emitted = 0
         self.rows_in = 0
@@ -282,7 +271,7 @@ class ShardedPipeline(_LMBatchEmitter):
     def state(self) -> ShardedPipelineState:
         return ShardedPipelineState(
             stream_cursors=[s.cursor for s in self.streams],
-            filter_state=fstate_to_arrays(self._fstate),
+            filter_state=self._session.save_state(self._fstate),
             buffer=self._buffer.copy(),
             batches_emitted=self.batches_emitted,
             rows_in=self.rows_in,
@@ -291,65 +280,24 @@ class ShardedPipeline(_LMBatchEmitter):
 
     def restore(self, st: ShardedPipelineState) -> None:
         if len(st.stream_cursors) != len(self.streams):
-            raise ValueError(
-                f"checkpoint has {len(st.stream_cursors)} shard cursors, "
-                f"pipeline has {len(self.streams)} shards — elastic "
-                "OrderState reshard is not supported yet (see ROADMAP)")
-        for stream, cur in zip(self.streams, st.stream_cursors):
-            stream.cursor = int(cur)
-        self._fstate = fstate_from_arrays(st.filter_state)
+            # elastic S→S′ rescale: the filter state reshards through the
+            # session (accumulators split/merged — sums, so exact; see
+            # core.session); every new round-robin stream partition resumes
+            # at the next unconsumed GLOBAL batch index (the max cursor —
+            # all source shards have walked the indices below it).
+            cursor = max(int(c) for c in st.stream_cursors)
+            for stream in self.streams:
+                stream.cursor = cursor
+        else:
+            for stream, cur in zip(self.streams, st.stream_cursors):
+                stream.cursor = int(cur)
+        self._fstate = self._session.restore_state(st.filter_state)
         self._buffer = st.buffer.copy()
         self.batches_emitted = st.batches_emitted
         self.rows_in = st.rows_in
         self.rows_pass = st.rows_pass
 
     # -------------------------------------------------------------- iteration
-    def _filter_block(self, columns: np.ndarray):
-        """One sharded step over the [C, S·R] block.
-
-        Returns (survivors shard-major | packed device tokens, n_pass).
-        With ``device_tokenize`` the whole filter→compact→tokenize→pack
-        chain runs in two jitted calls on the mesh and only the dense token
-        stream crosses to the host.
-        """
-        import jax.numpy as jnp
-
-        n_shards = self.filt.num_shards
-        cols = jnp.asarray(columns, jnp.float32)
-        n_local = int(cols.shape[1]) // n_shards
-        prev = self._fstate
-        if self._compact:
-            cap = self.filt.resolve_capacity(n_local)
-            self._fstate, packed, n_kept, mask, metrics = self._jit_step(
-                self._fstate, cols, capacity=cap)
-            counts = np.asarray(n_kept)
-            if self._device_tokenize:
-                toks, n_tok = tokenizer.tokens_from_padded(
-                    packed, n_kept, self.vocab_size, self.tokens_per_row)
-                payload = np.asarray(toks)[:int(n_tok)]
-            else:
-                packed_np = np.asarray(packed)
-                payload = np.concatenate(
-                    [packed_np[s][:, :int(counts[s])]
-                     for s in range(n_shards)], axis=1)
-            n_pass = int(counts.sum())
-        else:
-            self._fstate, mask, metrics = self._jit_step(self._fstate, cols)
-            mask_np = np.asarray(mask)
-            payload = columns[:, mask_np]
-            n_pass = int(mask_np.sum())
-        self._fstate = self.filt.maybe_exchange(self._fstate)
-        self.filt.observe_for_capacity(prev, self._fstate, n_local)
-        n_dropped = int(np.asarray(metrics.n_dropped).sum())
-        self._warn_dropped(n_dropped)
-        self.last_metrics = {
-            "work_units": float(np.asarray(metrics.work_units).sum()),
-            "perm": np.asarray(metrics.perm).tolist(),   # [S, P]
-            "epoch": int(np.asarray(self._fstate.epoch).max()),
-            "n_dropped": n_dropped,
-        }
-        return payload, n_pass
-
     def __iter__(self) -> Iterator[dict]:
         iters = [iter(s) for s in self.streams]
         while True:
@@ -360,7 +308,7 @@ class ShardedPipeline(_LMBatchEmitter):
                     return
                 rbs.append(rb)
             cols = np.concatenate([rb.columns for rb in rbs], axis=1)
-            payload, n_pass = self._filter_block(cols)
+            payload, n_pass = self._filter_step(cols)
             self.rows_in += cols.shape[1]
             self.rows_pass += n_pass
             if self._device_tokenize:
@@ -369,20 +317,63 @@ class ShardedPipeline(_LMBatchEmitter):
                 yield from self._emit(payload)
 
 
-def make_sharded_pipeline(filt: ShardedAdaptiveFilter, *, total_rows: int,
+def make_pipeline(session, *, total_rows: int, batch_rows: int,
+                  batch_size: int, seq_len: int, vocab_size: int | None = None,
+                  seed: int = 0, drift=None, tokens_per_row: int | None = None):
+    """One ``FilterSession`` → its ingestion pipeline.
+
+    Builds one round-robin ``LogStream`` partition per plan shard and
+    returns a ``Pipeline`` (1 shard) or ``ShardedPipeline`` (shard_map over
+    the session's mesh). Device tokenization follows the plan's
+    ``tokenize`` spec — there is nothing to wire by hand:
+    ``vocab_size``/``tokens_per_row`` default from it (they are only
+    required here when the plan has no tokenize stage and the host
+    tokenizer needs them).
+    """
+    from repro.data.stream import DriftConfig
+
+    spec = session.plan.tokenize
+    if vocab_size is None:
+        if spec is None:
+            raise ValueError("vocab_size is required when the plan has no "
+                             "TokenizeSpec to default it from")
+        vocab_size = spec.vocab_size
+    if tokens_per_row is None:
+        tokens_per_row = spec.tokens_per_row if spec is not None else 8
+    drift = drift or DriftConfig()
+    n = session.num_shards if session.sharded else 1
+    streams = [LogStream(total_rows=total_rows, batch_rows=batch_rows,
+                         seed=seed, drift=drift, shard_id=i, num_shards=n)
+               for i in range(n)]
+    kw = dict(batch_size=batch_size, seq_len=seq_len, vocab_size=vocab_size,
+              tokens_per_row=tokens_per_row)
+    if session.sharded:
+        return ShardedPipeline(streams, session, **kw)
+    return Pipeline(streams[0], session, **kw)
+
+
+def make_sharded_pipeline(filt, *, total_rows: int,
                           batch_rows: int, batch_size: int, seq_len: int,
                           vocab_size: int, seed: int = 0, drift=None,
                           tokens_per_row: int = 8,
                           device_tokenize: bool = False) -> ShardedPipeline:
-    """S round-robin partitions of one logical stream → ShardedPipeline."""
-    from repro.data.stream import DriftConfig
+    """Deprecated: build a ``FilterPlan`` (shards=N, tokenize=...) and call
+    ``make_pipeline(build_session(plan), ...)`` instead.
 
-    drift = drift or DriftConfig()
-    streams = [LogStream(total_rows=total_rows, batch_rows=batch_rows,
-                         seed=seed, drift=drift, shard_id=i,
-                         num_shards=filt.num_shards)
-               for i in range(filt.num_shards)]
-    return ShardedPipeline(streams, filt, batch_size=batch_size,
-                           seq_len=seq_len, vocab_size=vocab_size,
-                           tokens_per_row=tokens_per_row,
-                           device_tokenize=device_tokenize)
+    Thin delegating shim (DeprecationWarning once) — see the README
+    migration table.
+    """
+    warn_deprecated(
+        "make_sharded_pipeline",
+        "make_sharded_pipeline is deprecated; declare shards/tokenize on a "
+        "FilterPlan and call make_pipeline(build_session(plan), ...) "
+        "(see README 'One plan, one session')")
+    from repro.core.session import FilterSession
+
+    session = FilterSession.from_filter(
+        filt, tokenize=TokenizeSpec(vocab_size, tokens_per_row)
+        if device_tokenize else None)
+    return make_pipeline(session, total_rows=total_rows,
+                         batch_rows=batch_rows, batch_size=batch_size,
+                         seq_len=seq_len, vocab_size=vocab_size, seed=seed,
+                         drift=drift, tokens_per_row=tokens_per_row)

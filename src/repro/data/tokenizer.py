@@ -22,12 +22,15 @@ Two implementations of the SAME hash:
                               scatter the compactor uses — bit-identical to
                               the host stream (pinned by tests).
 
-The jax path is traced under ``jax.experimental.enable_x64`` because the
-hash is defined on the u64 bit pattern of the f64-widened column values
-(the numpy path's ``astype(float64).view(uint64)``). That makes it a CPU /
-GPU device stage today; a TPU deployment would split the mix into u32
-limbs — the call-site contract (padded buffers + counts in, packed token
-ids + total out) would not change.
+The hash is defined on the u64 bit pattern of the f64-widened column values
+(the numpy path's ``astype(float64).view(uint64)``). The jax path computes
+the SAME u64 arithmetic in **u32 limb pairs** — widening f32 bit patterns
+to f64 bit patterns by integer exponent/mantissa surgery, 64-bit
+add/xor/shift/multiply via (hi, lo) u32 carries, and the final
+``% vocab_size`` as a base-256 byte fold (exact for vocab < 2**24) — so it
+traces WITHOUT ``jax.experimental.enable_x64`` and lowers on TPU, where
+u64 is unsupported. Bit-exactness against the u64 host path is pinned by
+``tests/test_tokenizer_u32.py``.
 """
 
 from __future__ import annotations
@@ -39,6 +42,13 @@ import numpy as np
 _GAMMA = np.uint64(0x9E3779B97F4A7C15)
 _MIX1 = np.uint64(0xBF58476D1CE4E5B9)
 _MIX2 = np.uint64(0x94D049BB133111EB)
+
+
+def _max_device_vocab() -> int:
+    """Byte-fold modulo ceiling — single-sourced in ``core.plan``
+    (imported lazily: this module stays a numpy-only leaf)."""
+    from repro.core.plan import MAX_DEVICE_VOCAB
+    return MAX_DEVICE_VOCAB
 
 
 def _splitmix(x: np.ndarray) -> np.ndarray:
@@ -67,25 +77,131 @@ def rows_to_tokens(columns: np.ndarray, vocab_size: int,
     return np.stack(toks, axis=1).reshape(-1)
 
 
-# ============================================================== device path
+# ====================================================== u32-limb device path
+@functools.cache
+def _limb_ops():
+    """u64 arithmetic as (hi, lo) u32 limb pairs — TPU-lowerable primitives.
+
+    Everything here is exact mod-2^64 integer math: the splitmix constants
+    are split into static u32 halves, 64-bit multiply goes through the
+    classic 16-bit-limb mulhi decomposition (all intermediates < 2^32), and
+    f32→f64 widening is IEEE bit surgery (sign/exponent/mantissa re-bias,
+    including subnormal renormalization via count-leading-zeros) so no f64
+    value ever exists in the traced program.
+    """
+    import jax.numpy as jnp
+    from jax import lax
+
+    u32 = jnp.uint32
+    M16 = u32(0xFFFF)
+
+    def mul32_wide(a, b):
+        """u32 × u32 → (hi, lo) full 64-bit product, via 16-bit limbs."""
+        a0, a1 = a & M16, a >> u32(16)
+        b0, b1 = b & M16, b >> u32(16)
+        t = a0 * b0
+        w0 = t & M16
+        t = a1 * b0 + (t >> u32(16))
+        w2 = t >> u32(16)
+        t = a0 * b1 + (t & M16)
+        hi = a1 * b1 + w2 + (t >> u32(16))
+        lo = (t << u32(16)) | w0
+        return hi, lo
+
+    def add64(h, l, ch: int, cl: int):
+        """(h,l) + static u64 constant (given as two python ints)."""
+        lo = l + u32(cl)
+        carry = (lo < l).astype(jnp.uint32)
+        return h + u32(ch) + carry, lo
+
+    def shr64(h, l, k: int):
+        """logical right shift by static 0 < k < 32."""
+        return h >> u32(k), (l >> u32(k)) | (h << u32(32 - k))
+
+    def mul64(h, l, ch: int, cl: int):
+        """(h,l) · static u64 constant, low 64 bits."""
+        ph, pl = mul32_wide(l, u32(cl))
+        ph = ph + l * u32(ch) + h * u32(cl)
+        return ph, pl
+
+    def splitmix64(h, l):
+        h, l = add64(h, l, 0x9E3779B9, 0x7F4A7C15)
+        sh, sl = shr64(h, l, 30)
+        h, l = h ^ sh, l ^ sl
+        h, l = mul64(h, l, 0xBF58476D, 0x1CE4E5B9)
+        sh, sl = shr64(h, l, 27)
+        h, l = h ^ sh, l ^ sl
+        h, l = mul64(h, l, 0x94D049BB, 0x133111EB)
+        sh, sl = shr64(h, l, 31)
+        return h ^ sh, l ^ sl
+
+    def f64_bits_of_f32(x):
+        """f32[...] → (hi, lo) u32 IEEE-754 bit pattern of float64(x).
+
+        f32→f64 widening is exact, so the f64 bits are a pure function of
+        the f32 bits: re-bias the exponent (+896), shift the mantissa up 29
+        bits, and renormalize subnormals (value m·2^-149 becomes a normal
+        f64 with exponent p+874 where p = floor(log2 m)). Zeros keep their
+        sign; inf/NaN map to exponent 2047 with the payload widened the
+        same way (preserving the quiet bit).
+        """
+        bits = lax.bitcast_convert_type(x.astype(jnp.float32), jnp.uint32)
+        s_hi = (bits >> u32(31)) << u32(31)
+        e = (bits >> u32(23)) & u32(0xFF)
+        m = bits & u32(0x7FFFFF)
+        hi_wide = s_hi | (m >> u32(3))           # widened mantissa, hi part
+        lo_wide = (m & u32(0x7)) << u32(29)      # widened mantissa, lo part
+        hi_norm = hi_wide | ((e + u32(896)) << u32(20))
+        # NaNs are QUIETED like hardware cvtss2sd does (f64 quiet bit =
+        # mantissa bit 51 = hi bit 19); inf (m == 0) is left alone
+        quiet = jnp.where((e == u32(255)) & (m != u32(0)),
+                          u32(1) << u32(19), u32(0))
+        hi_inf = hi_wide | (u32(0x7FF) << u32(20)) | quiet
+        # subnormal: renormalize. p = floor(log2 m) in [0, 22]; the f64
+        # mantissa is (m - 2^p) << (52 - p), split across the limbs.
+        m_safe = jnp.maximum(m, u32(1))          # keep the dead lane defined
+        p = u32(31) - lax.clz(m_safe)
+        frac = m_safe ^ (u32(1) << p)
+        hi_mant = jnp.where(p <= u32(20),
+                            frac << jnp.where(p <= u32(20), u32(20) - p,
+                                              u32(0)),
+                            frac >> jnp.where(p > u32(20), p - u32(20),
+                                              u32(0)))
+        lo_sub = jnp.where(p >= u32(21),
+                           frac << jnp.where(p >= u32(21), u32(52) - p,
+                                             u32(0)),
+                           u32(0))
+        hi_sub = s_hi | ((p + u32(874)) << u32(20)) | (hi_mant & u32(0xFFFFF))
+        is_zero = (e == u32(0)) & (m == u32(0))
+        is_sub = (e == u32(0)) & (m != u32(0))
+        is_inf = e == u32(255)
+        hi = jnp.where(is_zero, s_hi,
+                       jnp.where(is_sub, hi_sub,
+                                 jnp.where(is_inf, hi_inf, hi_norm)))
+        lo = jnp.where(is_zero, u32(0), jnp.where(is_sub, lo_sub, lo_wide))
+        return hi, lo
+
+    def mod_u64(h, l, v: int):
+        """(h·2^32 + l) % v for static 1 <= v < 2^24, by base-256 byte fold
+        (r stays < v, so r·256 + byte < 2^32 — never overflows a limb)."""
+        assert 1 <= v < _max_device_vocab()
+        r = jnp.zeros_like(h)
+        for word in (h, l):
+            for shift in (24, 16, 8, 0):
+                r = (r * u32(256) + ((word >> u32(shift)) & u32(0xFF))) \
+                    % u32(v)
+        return r
+
+    return splitmix64, f64_bits_of_f32, mod_u64
+
+
 @functools.cache
 def _jit_tokens_from_padded():
-    """Build (lazily, once) the jitted device tokenizer.
-
-    Deferred import + trace so plain host users never pay for it, and the
-    uint64 lowering is set up exactly once under ``enable_x64``.
-    """
+    """Build (lazily, once) the jitted u32-limb device tokenizer."""
     import jax
     import jax.numpy as jnp
 
-    def _splitmix_dev(x):
-        x = x + jnp.uint64(0x9E3779B97F4A7C15)
-        x ^= x >> jnp.uint64(30)
-        x = x * jnp.uint64(0xBF58476D1CE4E5B9)
-        x ^= x >> jnp.uint64(27)
-        x = x * jnp.uint64(0x94D049BB133111EB)
-        x ^= x >> jnp.uint64(31)
-        return x
+    splitmix64, f64_bits_of_f32, mod_u64 = _limb_ops()
 
     @functools.partial(jax.jit,
                        static_argnames=("vocab_size", "tokens_per_row"))
@@ -93,16 +209,16 @@ def _jit_tokens_from_padded():
         s, c, cap = packed.shape
         # hash every slot (padding rows hash to garbage and are masked out —
         # branch-free, the device way)
-        base = jnp.zeros((s, cap), jnp.uint64)
+        bh = jnp.zeros((s, cap), jnp.uint32)
+        bl = jnp.zeros((s, cap), jnp.uint32)
         for ci in range(c):
-            bits = jax.lax.bitcast_convert_type(
-                packed[:, ci, :].astype(jnp.float64), jnp.uint64)
-            base = _splitmix_dev(base ^ bits)
+            xh, xl = f64_bits_of_f32(packed[:, ci, :])
+            bh, bl = splitmix64(bh ^ xh, bl ^ xl)
         toks = []
-        h = base
+        h, l = bh, bl
         for _ in range(tokens_per_row):
-            h = _splitmix_dev(h)
-            toks.append((h % jnp.uint64(vocab_size)).astype(jnp.int32))
+            h, l = splitmix64(h, l)
+            toks.append(mod_u64(h, l, vocab_size).astype(jnp.int32))
         tokens = jnp.stack(toks, axis=-1)            # i32[S, cap, T]
         # valid-count masking + shard-major O(N) pack (same cumsum scatter
         # as the survivor compactor — no sort anywhere in the pipeline)
@@ -121,21 +237,24 @@ def _jit_tokens_from_padded():
 
 def tokens_from_padded(packed, counts, vocab_size: int,
                        tokens_per_row: int = 8):
-    """Device tokenize+pack over padded survivor buffers.
+    """Device tokenize+pack over padded survivor buffers (u32-limb path).
 
     ``packed``: f32[S, C, cap] (or [C, cap] for a single pipeline — auto-
     promoted), ``counts``: i32[S] valid widths. Returns (tokens i32[S·cap·T]
     with the first ``n_valid`` entries live, n_valid i32[]) — the first
     ``n_valid`` tokens are bit-identical to ``rows_to_tokens`` applied to
-    the shard-major concatenation of the valid survivor slices.
+    the shard-major concatenation of the valid survivor slices. Traces
+    without ``enable_x64`` (u32 limb arithmetic throughout — TPU-lowerable);
+    requires ``vocab_size < 2**24``.
     """
-    import jax
     import jax.numpy as jnp
 
+    if not 1 <= vocab_size < _max_device_vocab():
+        raise ValueError(
+            f"device tokenize needs 1 <= vocab_size < {_max_device_vocab()} "
+            f"(u32-limb byte-fold modulo), got {vocab_size}")
     if packed.ndim == 2:
         packed = packed[None]
         counts = jnp.asarray(counts, jnp.int32).reshape((1,))
-    with jax.experimental.enable_x64():
-        return _jit_tokens_from_padded()(
-            packed, counts, vocab_size=vocab_size,
-            tokens_per_row=tokens_per_row)
+    return _jit_tokens_from_padded()(
+        packed, counts, vocab_size=vocab_size, tokens_per_row=tokens_per_row)

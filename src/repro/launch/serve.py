@@ -20,8 +20,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCHS, get_config, get_smoke_config
-from repro.core import (AdaptiveFilter, AdaptiveFilterConfig, OP_GT, OP_LT,
-                        OrderingConfig, Predicate)
+from repro.core import (FilterPlan, OP_GT, OP_LT, OrderingConfig, Predicate,
+                        build_session)
 from repro.models.registry import batch_for, build_model
 
 
@@ -64,15 +64,18 @@ def main() -> None:
     prefill = jax.jit(model.prefill)
     decode = jax.jit(model.decode_step, donate_argnums=(2,))
 
-    filt = AdaptiveFilter(
-        guardrail_chain(),
-        AdaptiveFilterConfig(ordering=OrderingConfig(
-            collect_rate=4, calculate_rate=64, momentum=0.3)))
-    fstate = filt.init_state()
-    fstep = filt.jit_step
+    # the guardrail stage is ONE declarative plan: compile it to a session
+    # and drive the single step entry point (same API the data pipelines
+    # use, so serve/train metrics agree field-for-field)
+    session = build_session(FilterPlan(
+        predicates=guardrail_chain(),
+        ordering=OrderingConfig(collect_rate=4, calculate_rate=64,
+                                momentum=0.3)))
+    fstate = session.init_state()
 
     rng = np.random.default_rng(0)
-    admitted = rejected = 0
+    admitted = rejected = dropped = 0
+    fmetrics = {}
     t0 = time.time()
     for i in range(0, args.requests, args.batch):
         feats = np.stack([rng.normal(600, 250, args.batch),
@@ -80,10 +83,12 @@ def main() -> None:
                           rng.normal(50, 30, args.batch),
                           (rng.uniform(size=args.batch) < 0.3).astype(float),
                           ]).astype(np.float32)
-        fstate, mask, fmetrics = fstep(fstate, jnp.asarray(feats))
-        mask = np.asarray(mask)
+        fstate, res = session.step(fstate, feats)
+        mask = res.mask_np
+        fmetrics = res.metrics_dict()
         admitted += int(mask.sum())
         rejected += int((~mask).sum())
+        dropped += fmetrics["n_dropped"]
         if not mask.any():
             continue
         batch = batch_for(cfg, args.batch, args.prompt_len, kind="prefill")
@@ -102,8 +107,9 @@ def main() -> None:
             tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
     dt = time.time() - t0
     print(f"[serve] admitted={admitted} rejected={rejected} "
-          f"guardrail perm={np.asarray(fstate.perm).tolist()} "
-          f"epochs={int(fstate.epoch)} ({dt:.1f}s)")
+          f"n_dropped={dropped} "
+          f"guardrail perm={fmetrics.get('perm')} "
+          f"epochs={fmetrics.get('epoch')} ({dt:.1f}s)")
 
 
 def _grow_cache(model, cache, batch, capacity):

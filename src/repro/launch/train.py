@@ -19,10 +19,9 @@ import numpy as np
 
 from repro.configs import ARCHS, get_config, get_smoke_config
 from repro.configs.paper_filters import DEFAULT as PAPER
-from repro.core import (AdaptiveFilter, AdaptiveFilterConfig, OrderingConfig,
-                        ShardedAdaptiveFilter, paper_filters_4,
-                        paper_filters_cnf)
-from repro.data.pipeline import Pipeline, make_sharded_pipeline
+from repro.core import (FilterPlan, OrderingConfig, TokenizeSpec,
+                        build_session, paper_filters_4, paper_filters_cnf)
+from repro.data.pipeline import Pipeline
 from repro.data.stream import DriftConfig, LogStream
 from repro.launch.steps import make_train_step
 from repro.models.registry import build_model
@@ -48,37 +47,37 @@ def build_pipeline(cfg, *, batch: int, seq: int, total_rows: int,
                    compact_capacity: int | str | None = None,
                    exchange: str = "eager",
                    device_tokenize: bool = False):
-    """One ingestion pipeline.
+    """One ingestion pipeline, declared as ONE ``FilterPlan``.
 
-    ``filter_shards > 1`` runs the adaptive filter data-parallel under
-    shard_map: one OrderState per mesh shard, scope-controlled statistics
-    exchange (see ``repro.core.sharded``). Needs that many visible devices —
-    on a CPU host force them with
+    Every CLI knob maps to a plan field (engine × scope × shards ×
+    compaction × exchange × tokenize — the whole matrix is validated once,
+    in the plan); ``build_session`` compiles it and the pipeline drives
+    ``session.step``. ``filter_shards > 1`` needs that many visible devices
+    — on a CPU host force them with
     ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
     """
+    if filter_shards > 1 and filter_shards > jax.device_count():
+        raise SystemExit(
+            f"--filter-shards {filter_shards} > visible devices "
+            f"({jax.device_count()}); set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={filter_shards} "
+            "or run on a bigger mesh")
     preds = (paper_filters_cnf if chain == "cnf" else paper_filters_4)("fig1")
-    fcfg = AdaptiveFilterConfig(ordering=ordering, scope=filter_scope,
-                                compact_output=compact_output,
-                                compact_capacity=compact_capacity,
-                                exchange=exchange)
+    plan = FilterPlan(
+        predicates=preds, ordering=ordering, scope=filter_scope,
+        shards=filter_shards, compact=compact_output,
+        capacity=compact_capacity, exchange=exchange,
+        tokenize=TokenizeSpec(cfg.vocab) if device_tokenize else None)
+    session = build_session(plan)
     if filter_shards > 1:
-        if filter_shards > jax.device_count():
-            raise SystemExit(
-                f"--filter-shards {filter_shards} > visible devices "
-                f"({jax.device_count()}); set XLA_FLAGS="
-                f"--xla_force_host_platform_device_count={filter_shards} "
-                "or run on a bigger mesh")
-        mesh = jax.make_mesh((filter_shards,), ("data",))
-        filt = ShardedAdaptiveFilter(preds, fcfg, mesh=mesh)
-        return make_sharded_pipeline(
-            filt, total_rows=total_rows, batch_rows=65536, drift=drift,
-            batch_size=batch, seq_len=seq, vocab_size=cfg.vocab,
-            device_tokenize=device_tokenize)
-    filt = AdaptiveFilter(preds, fcfg)
+        from repro.data.pipeline import make_pipeline
+        return make_pipeline(session, total_rows=total_rows,
+                             batch_rows=65536, drift=drift, batch_size=batch,
+                             seq_len=seq, vocab_size=cfg.vocab)
     stream = LogStream(total_rows=total_rows, batch_rows=65536,
                        drift=drift, shard_id=shard_id, num_shards=num_shards)
-    return Pipeline(stream, filt, batch_size=batch, seq_len=seq,
-                    vocab_size=cfg.vocab, device_tokenize=device_tokenize)
+    return Pipeline(stream, session, batch_size=batch, seq_len=seq,
+                    vocab_size=cfg.vocab)
 
 
 def main() -> None:
@@ -168,7 +167,10 @@ def main() -> None:
     print(f"[train] pipeline: rows_in={pipeline.rows_in} "
           f"rows_pass={pipeline.rows_pass} "
           f"filter perm={pipeline.last_metrics.get('perm')} "
-          f"epochs={pipeline.last_metrics.get('epoch')}")
+          f"epochs={pipeline.last_metrics.get('epoch')} "
+          f"n_dropped={pipeline.last_metrics.get('n_dropped', 0)}"
+          + (f" per_shard={pipeline.last_metrics['n_dropped_per_shard']}"
+             if "n_dropped_per_shard" in pipeline.last_metrics else ""))
 
 
 if __name__ == "__main__":

@@ -155,11 +155,16 @@ class TrainDriver:
 
 def _pipeline_state_to_json(pipeline) -> dict:
     """Handles both ``Pipeline`` (one cursor) and ``ShardedPipeline`` (one
-    cursor per shard + stacked OrderState; the leaves serialize the same)."""
+    cursor per shard). The filter state is the session's versioned blob:
+    scalar metadata (version, fingerprint, shard + accumulator layout)
+    rides under ``filter_meta`` so restores are guarded and elastic."""
     st = pipeline.state()
+    arrays = st.filter_state["arrays"]
     out = {
-        "filter_state": {k: v.tolist() for k, v in st.filter_state.items()},
-        "filter_dtypes": {k: str(v.dtype) for k, v in st.filter_state.items()},
+        "filter_meta": {k: v for k, v in st.filter_state.items()
+                        if k != "arrays"},
+        "filter_state": {k: v.tolist() for k, v in arrays.items()},
+        "filter_dtypes": {k: str(v.dtype) for k, v in arrays.items()},
         "buffer": st.buffer.tolist(),
         "batches_emitted": st.batches_emitted,
         "rows_in": st.rows_in,
@@ -174,8 +179,13 @@ def _pipeline_state_to_json(pipeline) -> dict:
 
 def _pipeline_state_from_json(pipeline, d: dict):
     from repro.data.pipeline import PipelineState, ShardedPipelineState
-    fs = {k: np.asarray(v, dtype=d["filter_dtypes"][k])
-          for k, v in d["filter_state"].items()}
+    arrays = {k: np.asarray(v, dtype=d["filter_dtypes"][k])
+              for k, v in d["filter_state"].items()}
+    # pre-session checkpoints have no envelope — their raw arrays load as
+    # v1 blobs; versioned ones reassemble the v2 envelope (fingerprint
+    # checked, elastic reshard applied on layout change)
+    fs = dict(d["filter_meta"], arrays=arrays) if "filter_meta" in d \
+        else arrays
     common = dict(filter_state=fs,
                   buffer=np.asarray(d["buffer"], np.int32),
                   batches_emitted=d["batches_emitted"], rows_in=d["rows_in"],

@@ -1,0 +1,98 @@
+"""u32-limb device tokenizer: bit-exact vs the u64 host hash, no x64.
+
+The device path re-expresses the splitmix64 hash — u64 add/xor/shift/mul
+and the f32→f64 widening it is defined on — as u32 limb arithmetic, so it
+traces without ``jax.experimental.enable_x64`` (TPU-lowerable). These pins
+hold the contract: every limb primitive matches numpy's u64 math exactly,
+including IEEE edge cases (±0, subnormals, inf, NaN).
+"""
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+from repro.data import tokenizer  # noqa: E402
+
+
+def _to_u64(hi, lo) -> np.ndarray:
+    return (np.asarray(hi, np.uint64) << np.uint64(32)) \
+        | np.asarray(lo, np.uint64)
+
+
+def _limbs(x: np.ndarray):
+    x = np.asarray(x, np.uint64)
+    return (jnp.asarray((x >> np.uint64(32)).astype(np.uint32)),
+            jnp.asarray((x & np.uint64(0xFFFFFFFF)).astype(np.uint32)))
+
+
+def test_splitmix_limbs_match_u64():
+    splitmix64, _, _ = tokenizer._limb_ops()
+    rng = np.random.default_rng(0)
+    x = rng.integers(0, 2 ** 64, 20_000, dtype=np.uint64)
+    x[:4] = [0, 1, 2 ** 63, 2 ** 64 - 1]
+    h, l = jax.jit(splitmix64)(*_limbs(x))
+    np.testing.assert_array_equal(_to_u64(h, l), tokenizer._splitmix(x))
+
+
+def test_f32_to_f64_bits_exact_including_edge_cases():
+    _, f64_bits, _ = tokenizer._limb_ops()
+    edge = np.array([0.0, -0.0, 1.0, -1.0, 0.5, 2.0, 3.14159, 65504.0,
+                     np.inf, -np.inf, np.nan,
+                     np.float32(2 ** -149),          # smallest subnormal
+                     -np.float32(2 ** -149),
+                     np.float32(1.1754942e-38),      # largest subnormal
+                     np.float32(2 ** -126),          # smallest normal
+                     np.float32(3.4028235e38)],      # largest normal
+                    np.float32)
+    # signaling NaNs: hardware f32→f64 conversion QUIETS them (sets the
+    # quiet bit) — the limb path must match that, payload preserved
+    edge = np.concatenate([edge, np.array(
+        [0x7F800001, 0xFF800001, 0x7FBFFFFF, 0x7FC00001],
+        np.uint32).view(np.float32)])
+    rng = np.random.default_rng(1)
+    vals = np.concatenate([
+        edge,
+        rng.normal(0, 1e3, 20_000).astype(np.float32),
+        rng.uniform(-1e-40, 1e-40, 5_000).astype(np.float32),  # subnormals
+        rng.uniform(-1e-30, 1e30, 5_000).astype(np.float32)])
+    hi, lo = jax.jit(f64_bits)(jnp.asarray(vals))
+    np.testing.assert_array_equal(
+        _to_u64(hi, lo), vals.astype(np.float64).view(np.uint64))
+
+
+@pytest.mark.parametrize("vocab", [2, 7, 1000, 50_257, 151_936,
+                                   (1 << 24) - 1])
+def test_mod_u64_byte_fold(vocab):
+    _, _, mod_u64 = tokenizer._limb_ops()
+    rng = np.random.default_rng(2)
+    x = rng.integers(0, 2 ** 64, 10_000, dtype=np.uint64)
+    got = jax.jit(lambda h, l: mod_u64(h, l, vocab))(*_limbs(x))
+    np.testing.assert_array_equal(np.asarray(got, np.uint64),
+                                  x % np.uint64(vocab))
+
+
+def test_tokens_from_padded_traces_without_x64():
+    """The whole device tokenizer runs with x64 DISABLED and matches the
+    host stream bit-for-bit (zero-padding, multi-shard, odd counts)."""
+    assert not jax.config.jax_enable_x64
+    rng = np.random.default_rng(3)
+    packed = rng.normal(0, 100, (3, 4, 128)).astype(np.float32)
+    packed[0, :, 100:] = 0.0            # padding slots hash-then-masked
+    counts = np.asarray([100, 0, 127], np.int32)
+    toks, n = tokenizer.tokens_from_padded(
+        jnp.asarray(packed), jnp.asarray(counts), 5000, 8)
+    assert int(n) == (100 + 0 + 127) * 8
+    host = np.concatenate([packed[s][:, :int(counts[s])]
+                           for s in range(3)], axis=1)
+    np.testing.assert_array_equal(
+        np.asarray(toks)[:int(n)],
+        tokenizer.rows_to_tokens(host, 5000, 8))
+
+
+def test_tokens_from_padded_rejects_giant_vocab():
+    with pytest.raises(ValueError, match="vocab_size"):
+        tokenizer.tokens_from_padded(
+            jnp.zeros((1, 2, 8), jnp.float32), jnp.zeros((1,), jnp.int32),
+            1 << 24)
