@@ -16,6 +16,16 @@ where the compaction modes are:
   fused    — the single-pass path: O(R) cumsum scatter on the jnp engine,
              in-kernel tile pack + offset-stitch gather launch on pallas.
 
+plus the tile-statistics skip-tier sweep (jnp engine):
+
+    layout ∈ {clustered, zordered, shuffled}  ×  skip_tier ∈ {off, zonemap}
+
+where layout is the physical row order of the stream (``--layout`` pins
+one; default sweeps all three) — clustered/zordered tiles mostly resolve
+under zone maps and the row-level chain runs only on the ambiguous
+remainder; shuffled resolves nothing and measures the triage overhead
+alone.
+
 Emits the CSV contract rows ``name,us_per_call,derived`` (us_per_call =
 µs/row) and writes ``BENCH_ingest.json`` next to this file so the perf
 trajectory has a machine-readable baseline:
@@ -23,9 +33,11 @@ trajectory has a machine-readable baseline:
   {"cells": [...], "derived": {"speedup_fused_vs_argsort_jnp": ...}}
 
 ``--smoke`` shrinks the sweep for CI (CPU, interpret-mode pallas) and FAILS
-(exit 1) if the fused path is slower than the unfused (argsort) path by
+(exit 1) if (a) the fused path is slower than the unfused (argsort) path by
 more than 1.15× on the jnp engine — the "adaptive-primitive overhead must
-stay in the noise" regression gate.
+stay in the noise" regression gate — or (b) the clustered-layout
+``skip_tier=zonemap`` cell is not ≥ 1.3× faster end-to-end than ``off``
+(the skip-tier acceptance gate).
 
 Usage:
   PYTHONPATH=src python benchmarks/ingest.py
@@ -58,6 +70,10 @@ def parse_args():
                     help="timed steps per cell (after one compile call)")
     ap.add_argument("--capacity", type=int, default=None,
                     help="compaction width (default: batch width)")
+    ap.add_argument("--layout", default=None,
+                    choices=("clustered", "zordered", "shuffled"),
+                    help="pin the skip-tier sweep to one stream layout "
+                         "(default: all three)")
     ap.add_argument("--smoke", action="store_true",
                     help="small CI sweep + fused-vs-unfused regression gate")
     ap.add_argument("--out", default=str(OUT))
@@ -154,6 +170,46 @@ def bench_compaction(args, results):
     return ratios
 
 
+def bench_skip_tier(args, results):
+    """layout × skip_tier cells on the jnp engine, through ``session.step``
+    (triage + gather + chain + the per-step host sync all inside the timed
+    window — the end-to-end number the acceptance ratio gates)."""
+    import jax.numpy as jnp
+
+    from repro.core import FilterPlan, OrderingConfig, build_session, \
+        paper_filters_4
+    from repro.data.stream import gen_batch
+
+    # full-width batches even under --smoke: the tier's win is compute
+    # skipped per dispatch, and at tiny widths the per-step host sync
+    # (ambiguous-count readback) dominates both arms equally, squeezing
+    # the gated ratio into noise
+    rows = max(args.batch_rows, 65536)
+    ordering = OrderingConfig(collect_rate=1000, calculate_rate=10 * rows)
+    layouts = (args.layout,) if args.layout else \
+        ("clustered", "zordered", "shuffled")
+    ratios = {}
+    for layout in layouts:
+        cols = jnp.asarray(gen_batch(0, 0, 0, rows, layout=layout))
+        cells = {}
+        for tier in ("off", "zonemap"):
+            session = build_session(FilterPlan(
+                predicates=paper_filters_4("fig1"), engine="jnp",
+                ordering=ordering, skip_tier=tier))
+            state = session.init_state()
+            sec = time_step(session.step, state, cols, args.steps)
+            us_row = sec * 1e6 / rows
+            cells[tier] = us_row
+            name = f"ingest/skip/{layout}/{tier}"
+            derived = f"engine=jnp;layout={layout};skip_tier={tier};rows={rows}"
+            print(f"{name},{us_row:.4f},{derived}", flush=True)
+            results.append({"name": name, "engine": "jnp", "layout": layout,
+                            "skip_tier": tier, "rows": rows,
+                            "us_per_row": us_row})
+        ratios[layout] = cells["off"] / cells["zonemap"]
+    return ratios
+
+
 def bench_scopes(args, results):
     """scope × exchange cells through the sharded step, state threaded so
     epoch boundaries — and therefore the deferred exchange collective —
@@ -207,11 +263,14 @@ def main():
 
     results: list[dict] = []
     ratios = bench_compaction(args, results)
+    skip_ratios = bench_skip_tier(args, results)
     bench_scopes(args, results)
 
     import jax
 
     derived = {f"speedup_fused_vs_argsort_{k}": v for k, v in ratios.items()}
+    derived |= {f"speedup_skip_zonemap_{k}": v
+                for k, v in skip_ratios.items()}
     payload = {"rows": args.batch_rows, "steps": args.steps,
                "smoke": bool(args.smoke), "backend": jax.default_backend(),
                "note": ("pallas cells run in interpret mode off-TPU: a "
@@ -228,6 +287,11 @@ def main():
         print(f"# FAIL: fused compaction {1 / ratios['jnp']:.2f}x slower "
               "than the unfused (argsort) path on the jnp engine "
               "(gate: 1.15x)", file=sys.stderr)
+        return 1
+    if args.smoke and skip_ratios.get("clustered", 1.3) < 1.3:
+        print(f"# FAIL: clustered-layout skip_tier=zonemap is only "
+              f"{skip_ratios['clustered']:.2f}x over off on the jnp engine "
+              "(acceptance gate: 1.3x)", file=sys.stderr)
         return 1
     return 0
 

@@ -19,7 +19,10 @@ ART = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
 
 def filter_ingest_model(*, n_cols: int = 4, tile: int = 2048,
                         pass_rate: float = 0.25, dtype_bytes: int = 4,
-                        batch_rows: int = 65536) -> dict:
+                        batch_rows: int = 65536,
+                        skip_fraction: float = 0.0,
+                        skip_pass_fraction: float = 0.0,
+                        bloom: bool = False) -> dict:
     """Grid-step HBM byte model for the filter→compact ingestion pass.
 
     chain-only        : C·T·B read + T mask write (the pre-compaction
@@ -40,6 +43,21 @@ def filter_ingest_model(*, n_cols: int = 4, tile: int = 2048,
                         stand-in moves whole tiles in launch 2; a Mosaic
                         lowering DMAs the counted prefix via scalar
                         prefetch, which is what this model charges.)
+    skip tier         : with ``skip_fraction`` of 128-row sub-tiles
+                        provably decided by zone maps (``skip_pass_fraction``
+                        of THOSE provably passing), the fused launch is
+                        additionally charged the summary pass — per
+                        128-row sub-tile: write+read of 2·C f32 min/max
+                        (+ C Bloom 128-bit bitmaps when ``bloom``) — while
+                        a Mosaic lowering's DMA gating never streams
+                        provably-FAILED sub-tiles into VMEM at all, so the
+                        chain read shrinks to the undecided + pass
+                        fraction (pass sub-tiles are still read once for
+                        the bulk copy). ``bytes_fused_skip`` therefore
+                        drops toward the summary floor as layouts cluster
+                        (skip_fraction → 1) and degrades to fused + the
+                        summary overhead when nothing is provable
+                        (skip_fraction = 0) — the graceful-shuffle case.
     """
     import math
 
@@ -53,15 +71,36 @@ def filter_ingest_model(*, n_cols: int = 4, tile: int = 2048,
     p_quant = math.ceil(pass_rate * tile / 128) * 128 / tile
     surv = p_quant * col_bytes
     fused = (chain_only + col_bytes + 4) + (4 + surv + surv)
+
+    # ---- skip tier: tile-summary traffic + decided-sub-tile read savings
+    sub_tiles = tile // 128                             # 128-row sub-tiles
+    summary_bytes = 2 * n_cols * 4 * sub_tiles          # f32 min/max lanes
+    if bloom:
+        summary_bytes += n_cols * 16 * sub_tiles        # 128-bit bitmaps
+    summary_bytes *= 2                                  # written, then read
+    fail_frac = skip_fraction * (1.0 - skip_pass_fraction)
+    pass_frac = skip_fraction * skip_pass_fraction
+    # chain launch reads only undecided + pass sub-tiles (fail sub-tiles
+    # are DMA-gated out); pass sub-tiles skip predicate math but are still
+    # copied through VMEM to the packed output
+    read_frac = 1.0 - fail_frac
+    surv_skip = min(p_quant + pass_frac, 1.0) * col_bytes
+    fused_skip = (summary_bytes + read_frac * col_bytes + mask_bytes
+                  + read_frac * col_bytes + 4) + (4 + surv_skip + surv_skip)
     return {
         "n_cols": n_cols, "tile": tile, "pass_rate": pass_rate,
         "bytes_chain_only": chain_only,
         "bytes_unfused_argsort": unfused,
         "bytes_fused": fused,
         "fused_traffic_ratio": fused / unfused,
+        "skip_fraction": skip_fraction,
+        "bytes_summary": summary_bytes,
+        "bytes_fused_skip": fused_skip,
+        "skip_traffic_ratio": fused_skip / fused,
         "note": "fused removes the sort entirely and touches survivor "
                 "bytes only in launch 2; at low pass-rates the gather "
-                "launch is nearly free",
+                "launch is nearly free; the skip tier trades a ~1% "
+                "summary pass for not reading decided tiles at all",
     }
 
 _NOTES = {
@@ -129,6 +168,16 @@ def render_ingest_model() -> list[str]:
             f"chain={m['bytes_chain_only']};"
             f"unfused={m['bytes_unfused_argsort']:.0f};"
             f"fused={m['bytes_fused']:.0f}")
+    out.append("# --- skip-tier read-savings model (zone maps, pass_rate="
+               "0.05) ---")
+    for sf in (0.0, 0.25, 0.5, 0.75, 0.9):
+        m = filter_ingest_model(pass_rate=0.05, skip_fraction=sf,
+                                skip_pass_fraction=0.05)
+        out.append(
+            f"ingest-model/skip{sf:g},{m['skip_traffic_ratio']:.4f},"
+            f"summary={m['bytes_summary']};"
+            f"fused={m['bytes_fused']:.0f};"
+            f"fused_skip={m['bytes_fused_skip']:.0f}")
     return out
 
 

@@ -4,10 +4,9 @@ This is the framework's analogue of the paper's Catalyst extension: a
 pipeline stage that can replace any static conjunctive (or CNF) filter.
 The USER-FACING surface is the plan/session API (``core.plan.FilterPlan``
 → ``core.session.build_session`` → one ``session.step``); this class is
-the math core a session compiles — ``step``/``_step_compact`` are pure
-functions of (state, batch) traced under jit/shard_map, and the legacy
-conveniences here (``step_compact``, ``jit_step_compact``) are thin
-deprecated shims over it.
+the math core a session compiles — ``step``/``_step_compact`` (and their
+skip-tier variants) are pure functions of (state, batch) traced under
+jit/shard_map.
 
 All execution semantics live behind the ``FilterEngine`` registry
 (``core/engine/``) and all ordering math in ``core.ordering`` /
@@ -48,7 +47,8 @@ from repro.core import ordering as ordering_lib
 from repro.core import predicates as pred_lib
 from repro.core.engine import MonitorSpec, get_engine
 from repro.core.ordering import OrderingConfig, OrderState
-from repro.core.plan import validate_combo, warn_deprecated
+from repro.core import skip_tier as skip_tier_lib
+from repro.core.plan import validate_combo
 from repro.core.scope import Scope, reduce_stats, scope_from_str
 from repro.core.predicates import Predicate
 from repro.core.stats import FilterStats
@@ -104,6 +104,11 @@ class AdaptiveFilterConfig:
     # Statistics exchange cadence for the CENTRALIZED scope (see module
     # docstring): "eager" | "deferred" | "deferred-async".
     exchange: str = "eager"
+    # Tile-statistics skip tier (``core.skip_tier``): "off" | "zonemap" |
+    # "zonemap+bloom" | "auto". Zone maps (+ Bloom bits) resolve whole
+    # 128-row tiles before the row-level chain; never changes survivors or
+    # ordering statistics, only speed. "auto" is driven by the session.
+    skip_tier: str = "off"
 
     def __post_init__(self) -> None:
         # every cross-field rule lives in ONE place: core.plan.validate_combo
@@ -114,7 +119,8 @@ class AdaptiveFilterConfig:
                        compact_output=self.compact_output,
                        compact_capacity=self.compact_capacity,
                        compact_slack=self.compact_slack,
-                       exchange=self.exchange)
+                       exchange=self.exchange,
+                       skip_tier=self.skip_tier)
 
 
 class StepMetrics(NamedTuple):
@@ -124,6 +130,10 @@ class StepMetrics(NamedTuple):
     epoch: jnp.ndarray          # epochs completed so far
     adj_rank: jnp.ndarray       # current smoothed GROUP ranks
     n_dropped: jnp.ndarray      # survivors lost to compact_capacity overflow
+    # skip-tier tile counters (i32; all zero when the tier is off)
+    n_tiles_pass: jnp.ndarray       # tiles bulk-kept by the zone-map proof
+    n_tiles_fail: jnp.ndarray       # tiles dropped without row-level work
+    n_tiles_ambiguous: jnp.ndarray  # tiles that reached the row-level chain
 
 
 class AdaptiveFilter:
@@ -147,6 +157,9 @@ class AdaptiveFilter:
             else get_engine("jnp")
         self._jit_step = None
         self._jit_step_compact = None
+        self._jit_step_triage = None
+        self._jit_step_skip = None
+        self._jit_step_skip_compact = None
         self._jit_exchange = None
         self._jit_exchange_with = None
         # deferred-async: merged stats from the previous boundary, applied
@@ -179,19 +192,47 @@ class AdaptiveFilter:
                 self._step_compact, static_argnames=("capacity",))
         return self._jit_step_compact
 
+    # ------------------------------------------------------------ skip tier
     @property
-    def jit_step_compact(self):
-        """Deprecated: use ``build_session(plan).step`` (one entry point).
+    def _jit_triage(self):
+        """Jitted zone-map triage; ``bloom`` is static (two traces max)."""
+        if self._jit_step_triage is None:
+            self._jit_step_triage = jax.jit(
+                lambda columns, bloom: self._step_engine.triage(
+                    columns, self.specs, bloom=bloom),
+                static_argnames=("bloom",))
+        return self._jit_step_triage
 
-        Kept as a delegating shim so pinned parity tests and out-of-tree
-        callers keep working; emits a DeprecationWarning once.
-        """
-        warn_deprecated(
-            "AdaptiveFilter.jit_step_compact",
-            "AdaptiveFilter.jit_step_compact is deprecated; declare "
-            "compact=True on a FilterPlan and call session.step "
-            "(see README 'One plan, one session')")
-        return self._jit_compact
+    @property
+    def _jit_skip(self):
+        """Jitted ``_step_skip``; ``amb_cap`` is static (quantized widths)."""
+        if self._jit_step_skip is None:
+            self._jit_step_skip = jax.jit(
+                self._step_skip, static_argnames=("amb_cap",))
+        return self._jit_step_skip
+
+    @property
+    def _jit_skip_compact(self):
+        if self._jit_step_skip_compact is None:
+            self._jit_step_skip_compact = jax.jit(
+                self._step_skip_compact,
+                static_argnames=("capacity", "amb_cap"))
+        return self._jit_step_skip_compact
+
+    def skip_on_mode(self) -> str:
+        """The arm ``skip_tier="auto"`` tunes against "off": Bloom bits only
+        pay when the chain has an equality predicate to consult them."""
+        return "zonemap+bloom" \
+            if any(p.op == pred_lib.OP_EQ for p in self.predicates) \
+            else "zonemap"
+
+    def skip_amb_cap(self, info, n_rows: int) -> int:
+        """Static gather width (tiles) for one step — 0 when the engine
+        predicates in-kernel instead of gathering (no host sync needed)."""
+        if not getattr(self._step_engine, "skip_gathers", False):
+            return 0
+        n_tiles = -(-n_rows // skip_tier_lib.SKIP_TILE)
+        return skip_tier_lib.quantize_amb_cap(int(info.n_ambiguous), n_tiles)
 
     # ----------------------------------------------------------- jit'd step
     def _advance_state(self, state: OrderState, res, costs,
@@ -233,6 +274,11 @@ class AdaptiveFilter:
             adj_rank=new_state.adj_rank,
             n_dropped=jnp.zeros((), jnp.int32) if n_dropped is None
             else n_dropped,
+            # concrete i32 arrays always (ChainResult defaults them to the
+            # python int 0, which tree ops downstream cannot stack)
+            n_tiles_pass=jnp.asarray(res.n_tiles_pass, jnp.int32),
+            n_tiles_fail=jnp.asarray(res.n_tiles_fail, jnp.int32),
+            n_tiles_ambiguous=jnp.asarray(res.n_tiles_ambiguous, jnp.int32),
         )
 
     def _perm(self, state: OrderState):
@@ -259,21 +305,40 @@ class AdaptiveFilter:
                                         int(columns.shape[1]))
         return new_state, res.mask, self._metrics(res, perm, new_state)
 
-    def step_compact(self, state: OrderState, columns: jnp.ndarray,
-                     measured_costs: jnp.ndarray | None = None,
-                     *, capacity: int | None = None):
-        """Deprecated: use ``build_session(plan).step`` (one entry point).
+    def _step_skip(self, state: OrderState, columns: jnp.ndarray,
+                   pass_tiles, fail_tiles, *, amb_cap: int
+                   ) -> tuple[OrderState, jnp.ndarray, StepMetrics]:
+        """``step`` behind the zone-map skip tier.
 
-        Thin delegating shim over the internal ``_step_compact``; emits a
-        DeprecationWarning once. See the README migration table.
+        ``pass_tiles``/``fail_tiles`` come from ``_jit_triage`` on the same
+        batch; ``amb_cap`` (static) from ``skip_amb_cap`` — the one host
+        sync of the tier. Ordering statistics advance identically to
+        ``step``: the monitor lane runs row-level on the full batch.
         """
-        warn_deprecated(
-            "AdaptiveFilter.step_compact",
-            "AdaptiveFilter.step_compact is deprecated; declare "
-            "compact=True on a FilterPlan and call session.step "
-            "(see README 'One plan, one session')")
-        return self._step_compact(state, columns, measured_costs,
-                                  capacity=capacity)
+        perm = self._perm(state)
+        skip = skip_tier_lib.SkipInfo(pass_tiles, fail_tiles, None)
+        res = self._step_engine.run_chain_skip(
+            columns, self.specs, perm, self._monitor_spec(state), skip,
+            amb_cap=amb_cap)
+        new_state = self._advance_state(state, res, res.monitor_cost,
+                                        int(columns.shape[1]))
+        return new_state, res.mask, self._metrics(res, perm, new_state)
+
+    def _step_skip_compact(self, state: OrderState, columns: jnp.ndarray,
+                           pass_tiles, fail_tiles, *, amb_cap: int,
+                           capacity: int):
+        """``_step_compact`` behind the zone-map skip tier."""
+        perm = self._perm(state)
+        skip = skip_tier_lib.SkipInfo(pass_tiles, fail_tiles, None)
+        res, packed, n_kept = self._step_engine.run_chain_compact_skip(
+            columns, self.specs, perm, self._monitor_spec(state), skip,
+            amb_cap=amb_cap, capacity=capacity)
+        new_state = self._advance_state(state, res, res.monitor_cost,
+                                        int(columns.shape[1]))
+        n_pass = jnp.sum(res.mask.astype(jnp.int32))
+        metrics = self._metrics(res, perm, new_state,
+                                n_dropped=n_pass - n_kept)
+        return new_state, packed, n_kept, res.mask, metrics
 
     def _step_compact(self, state: OrderState, columns: jnp.ndarray,
                       measured_costs: jnp.ndarray | None = None,
@@ -287,7 +352,7 @@ class AdaptiveFilter:
         pass over HBM: the pallas engine packs survivors in-kernel while
         each tile is in VMEM, the jnp engine fuses an O(R) cumsum scatter
         (no argsort). jit/shard_map-compatible; ``capacity`` must be static
-        under jit (``jit_step_compact`` handles that).
+        under jit (``_jit_compact`` handles that).
         """
         if capacity is None:
             if self.config.compact_capacity == "auto":
@@ -447,11 +512,18 @@ class AdaptiveFilter:
         defer = self.exchange_deferred
         for batch in batches:
             perm = state.perm if cfg.adaptive else np.arange(n_preds)
-            res = self._engine.run_chain(
-                batch, self.specs, perm,
-                MonitorSpec(collect_rate=cfg.ordering.collect_rate,
-                            sample_phase=int(state.sample_phase),
-                            cost_mode=cfg.cost_mode))
+            monitor = MonitorSpec(collect_rate=cfg.ordering.collect_rate,
+                                  sample_phase=int(state.sample_phase),
+                                  cost_mode=cfg.cost_mode)
+            if cfg.skip_tier != "off":
+                # "auto" is rejected for host engines by validate_combo;
+                # the host engine triages internally (skip=None)
+                res = self._engine.run_chain_skip(
+                    batch, self.specs, perm, monitor,
+                    bloom=cfg.skip_tier == "zonemap+bloom")
+            else:
+                res = self._engine.run_chain(batch, self.specs, perm,
+                                             monitor)
             if cfg.adaptive:
                 state = ordering_lib.advance(
                     state, cfg.ordering, res.cut_counts, res.monitor_cost,
@@ -475,6 +547,9 @@ class AdaptiveFilter:
                 "perm": [int(i) for i in perm],
                 "epoch": int(state.epoch),
                 "n_dropped": 0,
+                "n_tiles_skipped_pass": int(res.n_tiles_pass),
+                "n_tiles_skipped_fail": int(res.n_tiles_fail),
+                "n_tiles_ambiguous": int(res.n_tiles_ambiguous),
             }
 
 

@@ -28,6 +28,26 @@ class ChainResult(NamedTuple):
     n_monitored: Any      # f32[] — monitor lane: sampled row count
     monitor_cost: Any     # f32[P] — per-predicate monitor cost contribution
     group_cut_counts: Any  # f32[G] — monitor lane: rows cut by each OR-group
+    # skip-tier counters (core/skip_tier.py); zero whenever the tier is off.
+    # Work/active counters above charge only ambiguous-tile rows when the
+    # tier resolves tiles — the row-level work actually performed.
+    n_tiles_pass: Any = 0       # i32[] — tiles provably passing every group
+    n_tiles_fail: Any = 0       # i32[] — tiles provably failing some group
+    n_tiles_ambiguous: Any = 0  # i32[] — tiles sent to the row-level chain
+
+
+class SkipInfo(NamedTuple):
+    """Tri-state tile resolution produced by an engine's ``triage``.
+
+    ``pass_tiles``/``fail_tiles`` are bool[T] over the engine's padded
+    128-row tiling of the batch (mutually exclusive; everything else is
+    ambiguous). ``n_ambiguous`` is an i32 scalar the session syncs once per
+    step to size the jnp gather width (``skip_tier.quantize_amb_cap``).
+    """
+
+    pass_tiles: Any
+    fail_tiles: Any
+    n_ambiguous: Any
 
 
 class MonitorSpec(NamedTuple):
@@ -58,11 +78,32 @@ class FilterEngine(Protocol):
         """``run_chain`` + fixed-capacity survivor compaction in one pass.
 
         Returns (ChainResult, packed f32[C, capacity], n_kept i32[]).
-        Traceable engines must implement this so ``step_compact`` never
-        needs a second full-width pass over the batch: the jnp engine
-        chains the O(R) cumsum scatter onto its masked evaluation (XLA
-        fuses them), the pallas engine packs survivors in-kernel while the
-        tile is still in VMEM. Host engines may omit it — their
+        Traceable engines must implement this so the fused compacting step
+        never needs a second full-width pass over the batch: the jnp
+        engine chains the O(R) cumsum scatter onto its masked evaluation
+        (XLA fuses them), the pallas engine packs survivors in-kernel
+        while the tile is still in VMEM. Host engines may omit it — their
         boolean-index short-circuit already emits compacted rows.
         """
         ...
+
+    # --- optional skip-tier surface (core/skip_tier.py) -----------------
+    # Engines that support the tile-statistics skip tier additionally
+    # implement:
+    #
+    #   triage(columns, specs, *, bloom: bool) -> SkipInfo
+    #       Zone-map (+ optional Bloom) summaries resolved against the
+    #       chain. Specs must be trace-time constants (closed over, not
+    #       traced) — resolution branches on each predicate's op in
+    #       python.
+    #
+    #   run_chain_skip(columns, specs, perm, monitor, skip, *, amb_cap)
+    #   run_chain_compact_skip(..., capacity, fill)
+    #       ``run_chain``/``run_chain_compact`` with provably-decided
+    #       tiles bypassing the row-level chain. ``amb_cap`` is the static
+    #       gathered width in tiles for engines that gather (jnp); the
+    #       pallas engine predicates in-kernel and ignores it. The monitor
+    #       lane always runs row-level on the full batch, so ordering
+    #       statistics are identical with the tier on or off.
+    #
+    # ``supports_skip`` (class attribute, default False) advertises this.

@@ -2,9 +2,11 @@
 
 from __future__ import annotations
 
+import jax.numpy as jnp
+
 from repro.core import engine as engine_lib
-from repro.core import filter_exec
-from repro.core.engine.base import ChainResult, MonitorSpec
+from repro.core import filter_exec, skip_tier
+from repro.core.engine.base import ChainResult, MonitorSpec, SkipInfo
 
 
 @engine_lib.register("jnp")
@@ -12,6 +14,10 @@ class JnpEngine:
     """Fully vectorized masked CNF chain; exact row-level work counters."""
 
     traceable = True
+    supports_skip = True
+    # the jnp skip path gathers ambiguous tiles into a static-width buffer,
+    # so the session must sync the ambiguous count and size ``amb_cap``
+    skip_gathers = True
 
     def run_chain(self, columns, specs, perm,
                   monitor: MonitorSpec) -> ChainResult:
@@ -24,6 +30,33 @@ class JnpEngine:
                           *, capacity: int, fill: float = 0.0):
         """Chain + O(R) cumsum compaction (no argsort); XLA fuses the two."""
         res = self.run_chain(columns, specs, perm, monitor)
+        packed, n_kept = filter_exec.compact_fixed(columns, res.mask,
+                                                   capacity, fill)
+        return res, packed, n_kept
+
+    # ------------------------------------------------------- skip tier
+    def triage(self, columns, specs, *, bloom: bool) -> SkipInfo:
+        """Zone-map (+ Bloom) summaries resolved against the chain."""
+        return skip_tier.triage(columns, specs, bloom=bloom, xp=jnp)
+
+    def run_chain_skip(self, columns, specs, perm, monitor: MonitorSpec,
+                       skip: SkipInfo, *, amb_cap: int) -> ChainResult:
+        """Gather ambiguous tiles → row-level chain → scatter the mask back.
+
+        The expensive predicates genuinely run at the gathered width (the
+        masked off-path evaluates them full-width), which is where the
+        clustered-layout speedup comes from. The monitor lane runs on the
+        full batch — ordering statistics are identical with the tier off.
+        """
+        return skip_tier.run_chain_skip_jnp(columns, specs, perm, monitor,
+                                            skip, amb_cap=amb_cap)
+
+    def run_chain_compact_skip(self, columns, specs, perm,
+                               monitor: MonitorSpec, skip: SkipInfo, *,
+                               amb_cap: int, capacity: int,
+                               fill: float = 0.0):
+        res = self.run_chain_skip(columns, specs, perm, monitor, skip,
+                                  amb_cap=amb_cap)
         packed, n_kept = filter_exec.compact_fixed(columns, res.mask,
                                                    capacity, fill)
         return res, packed, n_kept

@@ -36,6 +36,19 @@ class NumpyEngine:
     """Compacted short-circuit CNF chain on the host (Spark's processNext)."""
 
     traceable = False
+    supports_skip = True
+    skip_gathers = False     # host path indexes ambiguous rows directly
+
+    def _monitor(self, columns, preds, monitor: MonitorSpec, groups):
+        cut, group_cut, n_mon, secs = np_exec.run_monitor_np(
+            columns, preds, monitor.collect_rate,
+            int(monitor.sample_phase), groups=groups)
+        if monitor.cost_mode == "measured":
+            monitor_cost = secs
+        else:
+            monitor_cost = np.asarray(
+                [p.static_cost for p in preds], np.float64) * n_mon
+        return cut, group_cut, n_mon, monitor_cost
 
     def run_chain(self, columns, specs, perm,
                   monitor: MonitorSpec) -> ChainResult:
@@ -46,14 +59,8 @@ class NumpyEngine:
 
         mask, work, active_before = np_exec.run_chain_np(
             columns, preds, perm, groups=groups)
-        cut, group_cut, n_mon, secs = np_exec.run_monitor_np(
-            columns, preds, monitor.collect_rate,
-            int(monitor.sample_phase), groups=groups)
-        if monitor.cost_mode == "measured":
-            monitor_cost = secs
-        else:
-            monitor_cost = np.asarray(
-                [p.static_cost for p in preds], np.float64) * n_mon
+        cut, group_cut, n_mon, monitor_cost = self._monitor(
+            columns, preds, monitor, groups)
         return ChainResult(
             mask=mask,
             work_units=np.float32(work),
@@ -62,4 +69,61 @@ class NumpyEngine:
             n_monitored=np.float32(n_mon),
             monitor_cost=monitor_cost.astype(np.float32),
             group_cut_counts=group_cut.astype(np.float32),
+        )
+
+    # ------------------------------------------------------- skip tier
+    def triage(self, columns, specs, *, bloom: bool):
+        """Reference zone-map/Bloom triage (shared math, xp=numpy)."""
+        from repro.core import skip_tier
+        return skip_tier.triage(np.asarray(columns), specs, bloom=bloom,
+                                xp=np)
+
+    def run_chain_skip(self, columns, specs, perm, monitor: MonitorSpec,
+                       skip=None, *, bloom: bool = False,
+                       amb_cap: int = 0) -> ChainResult:
+        """Row-exact reference of the skip tier: decided 128-row tiles
+        bypass ``run_chain_np``; only ambiguous tiles' rows are evaluated
+        (and charged). ``skip=None`` computes the triage internally (host
+        streaming path); ``amb_cap`` is ignored — the host indexes the
+        ambiguous rows directly. Monitor lane: full batch, unchanged."""
+        from repro.core import skip_tier
+
+        columns = np.asarray(columns)
+        if skip is None:
+            skip = self.triage(columns, specs, bloom=bloom)
+        preds = _preds_from_specs(specs)
+        groups = specs.groups
+        perm = np.asarray(perm)
+        n_rows = columns.shape[1]
+        tile = skip_tier.SKIP_TILE
+
+        pass_t = np.asarray(skip.pass_tiles)
+        fail_t = np.asarray(skip.fail_tiles)
+        amb_tiles = np.nonzero(~(pass_t | fail_t))[0]
+        rows = (amb_tiles[:, None] * tile +
+                np.arange(tile)[None, :]).reshape(-1)
+        rows = rows[rows < n_rows]
+
+        sub_mask, work, active_before = np_exec.run_chain_np(
+            columns[:, rows], preds, perm, groups=groups)
+        mask = np.zeros(n_rows, bool)
+        prows = (np.nonzero(pass_t)[0][:, None] * tile +
+                 np.arange(tile)[None, :]).reshape(-1)
+        mask[prows[prows < n_rows]] = True
+        mask[rows] = sub_mask
+
+        cut, group_cut, n_mon, monitor_cost = self._monitor(
+            columns, preds, monitor, groups)
+        n_pass_t, n_fail_t, n_amb_t = skip_tier.tile_counters(skip, np)
+        return ChainResult(
+            mask=mask,
+            work_units=np.float32(work),
+            active_before=active_before,
+            cut_counts=cut.astype(np.float32),
+            n_monitored=np.float32(n_mon),
+            monitor_cost=monitor_cost.astype(np.float32),
+            group_cut_counts=group_cut.astype(np.float32),
+            n_tiles_pass=np.int32(n_pass_t),
+            n_tiles_fail=np.int32(n_fail_t),
+            n_tiles_ambiguous=np.int32(n_amb_t),
         )

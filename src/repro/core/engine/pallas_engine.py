@@ -7,7 +7,7 @@ runs compiled on TPU. See ``kernels/filter_chain`` for the kernel itself.
 from __future__ import annotations
 
 from repro.core import engine as engine_lib
-from repro.core.engine.base import ChainResult, MonitorSpec
+from repro.core.engine.base import ChainResult, MonitorSpec, SkipInfo
 
 
 @engine_lib.register("pallas")
@@ -15,6 +15,10 @@ class PallasEngine:
     """Fused VMEM-tile CNF chain with tile-level short-circuit."""
 
     traceable = True
+    supports_skip = True
+    # decided tiles are predicated in-kernel from SMEM scalars — no gather,
+    # so the session never needs to sync an ambiguous count for this engine
+    skip_gathers = False
 
     def run_chain(self, columns, specs, perm,
                   monitor: MonitorSpec) -> ChainResult:
@@ -33,6 +37,37 @@ class PallasEngine:
         from repro.kernels.filter_chain import ops as kernel_ops
         return kernel_ops.filter_chain_compact(
             columns, specs, perm,
+            collect_rate=monitor.collect_rate,
+            sample_phase=monitor.sample_phase,
+            capacity=capacity, fill=fill,
+            monitor_mode=monitor.mode)
+
+    # ------------------------------------------------------- skip tier
+    def triage(self, columns, specs, *, bloom: bool) -> SkipInfo:
+        """Pallas stats pre-pass + shared zone-map/Bloom resolution."""
+        from repro.kernels.filter_chain import ops as kernel_ops
+        return kernel_ops.skip_triage(columns, specs, bloom=bloom)
+
+    def run_chain_skip(self, columns, specs, perm, monitor: MonitorSpec,
+                       skip: SkipInfo, *, amb_cap: int = 0) -> ChainResult:
+        """Two-phase launch: decided sub-tiles are predicated in-kernel
+        (their rows start non-pending, so the existing ``alive > 0`` cond
+        skips every predicate for fully decided grid tiles); ``amb_cap``
+        is ignored — nothing is gathered."""
+        from repro.kernels.filter_chain import ops as kernel_ops
+        return kernel_ops.filter_chain_skip(
+            columns, specs, perm, skip,
+            collect_rate=monitor.collect_rate,
+            sample_phase=monitor.sample_phase,
+            monitor_mode=monitor.mode)
+
+    def run_chain_compact_skip(self, columns, specs, perm,
+                               monitor: MonitorSpec, skip: SkipInfo, *,
+                               amb_cap: int = 0, capacity: int,
+                               fill: float = 0.0):
+        from repro.kernels.filter_chain import ops as kernel_ops
+        return kernel_ops.filter_chain_compact_skip(
+            columns, specs, perm, skip,
             collect_rate=monitor.collect_rate,
             sample_phase=monitor.sample_phase,
             capacity=capacity, fill=fill,

@@ -39,7 +39,8 @@ from repro.core.engine.base import ChainResult
 from repro.core.predicates import PredicateSpecs
 
 __all__ = ["ChainResult", "monitor_indices", "run_monitor", "run_chain",
-           "compact", "compact_fixed", "compact_fixed_argsort"]
+           "run_chain_masks", "compact", "compact_fixed",
+           "compact_fixed_argsort"]
 
 
 def monitor_indices(n_rows: int, collect_rate: int, sample_phase):
@@ -83,23 +84,22 @@ def run_monitor(columns: jnp.ndarray, specs: PredicateSpecs,
             n_monitored, monitor_cost)
 
 
-def run_chain(columns: jnp.ndarray, specs: PredicateSpecs, perm: jnp.ndarray,
-              collect_rate: int, sample_phase) -> ChainResult:
-    """Masked CNF chain in ``perm`` order + monitor lane.
+def run_chain_masks(columns: jnp.ndarray, specs: PredicateSpecs,
+                    perm: jnp.ndarray, valid=None):
+    """Chain lane only (no monitor): masked CNF evaluation in ``perm`` order.
 
-    The boolean outcome is order-invariant (AND/OR commute); the work
-    counters are not — they are the paper's objective function, measured
-    exactly: predicate ``perm[k]`` is charged for every row still *pending*
-    at position k — alive through all closed groups AND not yet passed by an
-    earlier member of the current group (what a row-at-a-time engine with
-    both short-circuits would evaluate).
+    Returns (mask bool[R], work f32[], active_before f32[P]). ``valid``
+    (bool[R], optional) pre-cuts rows before the first predicate: the skip
+    tier's gathered ambiguous buffer uses it so padding and unused gather
+    slots are neither kept nor charged to the work counters.
     """
     n_rows = columns.shape[1]
     n_preds = specs.n
     flat = specs.is_flat                  # static → branch folds at trace
     garr = jnp.asarray(specs.groups, jnp.int32)
 
-    mask = jnp.ones((n_rows,), bool)      # survivors of all CLOSED groups
+    # survivors of all CLOSED groups
+    mask = jnp.ones((n_rows,), bool) if valid is None else valid
     group_or = jnp.zeros((n_rows,), bool)  # passes within the OPEN group
     work = jnp.zeros((), jnp.float32)
     active_before = []
@@ -123,13 +123,29 @@ def run_chain(columns: jnp.ndarray, specs: PredicateSpecs, perm: jnp.ndarray,
         new_mask = jnp.logical_and(mask, group_or)
         mask = new_mask if closes is True else jnp.where(closes, new_mask, mask)
 
+    return mask, work, jnp.stack(active_before)
+
+
+def run_chain(columns: jnp.ndarray, specs: PredicateSpecs, perm: jnp.ndarray,
+              collect_rate: int, sample_phase) -> ChainResult:
+    """Masked CNF chain in ``perm`` order + monitor lane.
+
+    The boolean outcome is order-invariant (AND/OR commute); the work
+    counters are not — they are the paper's objective function, measured
+    exactly: predicate ``perm[k]`` is charged for every row still *pending*
+    at position k — alive through all closed groups AND not yet passed by an
+    earlier member of the current group (what a row-at-a-time engine with
+    both short-circuits would evaluate).
+    """
+    mask, work, active_before = run_chain_masks(columns, specs, perm)
+
     cut, group_cut, n_mon, mon_cost = run_monitor(
         columns, specs, collect_rate, sample_phase)
 
     return ChainResult(
         mask=mask,
         work_units=work,
-        active_before=jnp.stack(active_before),
+        active_before=active_before,
         cut_counts=cut,
         n_monitored=n_mon,
         monitor_cost=mon_cost,
@@ -163,7 +179,7 @@ def compact_fixed(columns: jnp.ndarray, mask: jnp.ndarray, capacity: int,
     batch width, so survivors flow to downstream device stages — or a single
     dense host copy — without ever round-tripping through a host boolean
     index. Shared by every traceable engine: the engines produce the mask,
-    this gather consumes it (``AdaptiveFilter.step_compact``). Survivors
+    this gather consumes it (the fused compacting step). Survivors
     beyond ``capacity`` are dropped and ``n_kept`` saturates — size capacity
     from the stream's expected pass rate (capacity = batch width is always
     lossless; ``compact_capacity="auto"`` tracks the monitor lane's

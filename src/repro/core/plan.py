@@ -34,6 +34,16 @@ Valid field combinations (the single source of truth):
   tokenize    TokenizeSpec(vocab_size, tokens_per_row) to hash+pack the
               survivors on device; requires ``compact`` (it consumes the
               padded buffers) and vocab_size < 2**24 (u32-limb modulo).
+  skip_tier   "off" | "zonemap" | "zonemap+bloom" | "auto": the
+              tile-statistics skip tier (``core.skip_tier``) — 128-row
+              zone maps (+ Bloom bits for equality predicates) resolve
+              whole tiles before the row-level chain. Needs shards == 1
+              (the jnp path sizes a gather from a per-step host sync,
+              which cannot drive static shapes under shard_map); "auto"
+              needs a traceable engine — the session's online tuner
+              drives it by measured us_per_row. Survivors, tokens, and
+              ordering statistics are bit-identical with the tier on or
+              off; only speed changes.
 
 Two plans are checkpoint-compatible iff their *fingerprints* match: the
 fingerprint hashes the semantic identity of the adaptive state (predicate
@@ -57,6 +67,7 @@ from repro.core.engine import get_engine
 from repro.core.ordering import OrderingConfig
 from repro.core.predicates import Predicate
 from repro.core.scope import EXCHANGE_MODES, scope_from_str
+from repro.core.skip_tier import SKIP_TIER_MODES
 
 #: vocab ceiling of the u32-limb device tokenizer's byte-fold modulo —
 #: THE definition (``repro.data.tokenizer`` imports it lazily; it lives
@@ -86,7 +97,8 @@ def warn_deprecated(key: str, message: str) -> None:
 def validate_combo(*, scope: str, cost_mode: str, backend: str,
                    compact_output: bool, compact_capacity,
                    compact_slack: float, exchange: str, shards: int = 1,
-                   device_tokenize: bool = False) -> None:
+                   device_tokenize: bool = False,
+                   skip_tier: str = "off") -> None:
     """THE cross-field validation for every engine × scope × compaction ×
     exchange × tokenize combination.
 
@@ -136,6 +148,24 @@ def validate_combo(*, scope: str, cost_mode: str, backend: str,
     if device_tokenize and not compact_output:
         raise ValueError("device_tokenize consumes the padded compacted "
                          "buffers — it needs compact_output=True")
+    if skip_tier not in SKIP_TIER_MODES:
+        raise ValueError(
+            f"bad skip_tier {skip_tier!r}; pick from {SKIP_TIER_MODES}")
+    if skip_tier != "off":
+        if shards > 1:
+            raise ValueError(
+                "skip_tier needs shards == 1: the jnp skip path sizes its "
+                "ambiguous-tile gather from a per-step host sync, which "
+                "cannot drive static shapes under shard_map — run the "
+                "tier per-executor or drop it")
+        if not getattr(get_engine(backend), "supports_skip", False):
+            raise ValueError(
+                f"backend {backend!r} does not implement the skip tier")
+        if skip_tier == "auto" and not get_engine(backend).traceable:
+            raise ValueError(
+                "skip_tier='auto' is driven by the session's online "
+                "us_per_row tuner, which needs a traceable engine — pick "
+                "'zonemap'/'zonemap+bloom' explicitly for host engines")
 
 
 # ----------------------------------------------------------------- the plan
@@ -177,6 +207,7 @@ class FilterPlan:
     slack: float = 1.5
     exchange: str = "eager"
     tokenize: TokenizeSpec | None = None
+    skip_tier: str = "off"               # off | zonemap | zonemap+bloom | auto
 
     def __post_init__(self) -> None:
         object.__setattr__(self, "predicates", tuple(self.predicates))
@@ -187,16 +218,18 @@ class FilterPlan:
                        compact_capacity=self.capacity,
                        compact_slack=self.slack, exchange=self.exchange,
                        shards=self.shards,
-                       device_tokenize=self.tokenize is not None)
+                       device_tokenize=self.tokenize is not None,
+                       skip_tier=self.skip_tier)
 
     # ------------------------------------------------------------ identity
     def fingerprint(self) -> str:
         """Semantic identity of the adaptive state this plan produces.
 
         Covers the chain, the ordering config, scope, adaptivity, and cost
-        mode; excludes engine / shards / compaction / exchange / tokenize
-        (execution details a checkpoint is portable across — shard count
-        explicitly so, that is what elastic reshard is).
+        mode; excludes engine / shards / compaction / exchange / tokenize /
+        skip_tier (execution details a checkpoint is portable across —
+        shard count explicitly so, that is what elastic reshard is; the
+        skip tier never changes survivors or statistics, only speed).
         """
         payload = {
             "predicates": [

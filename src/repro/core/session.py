@@ -9,11 +9,9 @@ exchange / retune callables and exposes exactly one
 for every engine × scope × compaction × exchange × tokenize combination —
 the plan-then-compile shape of adaptive stream engines (Strider, arXiv
 1705.05688), with the adaptivity itself a drop-in primitive (Cuttlefish,
-arXiv 1802.09180). The legacy surfaces (``AdaptiveFilter.step_compact``,
-``jit_step_compact``, the pipelines' private driving loops) are thin
-wrappers over sessions; the driving logic — capacity resolution, deferred
-epoch exchange, auto-capacity retune, overflow accounting, JSON metrics —
-lives here exactly once.
+arXiv 1802.09180). All of the driving logic — capacity resolution, the
+skip-tier triage/tuner, deferred epoch exchange, auto-capacity retune,
+overflow accounting, JSON metrics — lives here exactly once.
 
 ``StepResult`` is the uniform step ABI replacing the four divergent legacy
 return shapes (mask-only, packed+count, sharded variants):
@@ -118,6 +116,22 @@ class StepResult(NamedTuple):
         nd = np.asarray(self.metrics.n_dropped)
         return [int(x) for x in np.atleast_1d(nd)]
 
+    # skip-tier tile counters (all zero when the tier is off for this step)
+    @property
+    def n_tiles_skipped_pass(self) -> int:
+        """128-row tiles bulk-kept by the zone-map proof (no row-level work)."""
+        return int(np.sum(np.asarray(self.metrics.n_tiles_pass)))
+
+    @property
+    def n_tiles_skipped_fail(self) -> int:
+        """128-row tiles dropped by the zone-map proof (no row-level work)."""
+        return int(np.sum(np.asarray(self.metrics.n_tiles_fail)))
+
+    @property
+    def n_tiles_ambiguous(self) -> int:
+        """128-row tiles that reached the row-level chain."""
+        return int(np.sum(np.asarray(self.metrics.n_tiles_ambiguous)))
+
     def survivors(self, columns: np.ndarray | None = None) -> np.ndarray:
         """Surviving rows as a host f32[C, n_pass] array (shard-major).
 
@@ -169,6 +183,9 @@ class StepResult(NamedTuple):
             "perm": np.asarray(self.metrics.perm).tolist(),
             "epoch": int(np.max(np.asarray(self.metrics.epoch))),
             "n_dropped": int(nd.sum()),
+            "n_tiles_skipped_pass": self.n_tiles_skipped_pass,
+            "n_tiles_skipped_fail": self.n_tiles_skipped_fail,
+            "n_tiles_ambiguous": self.n_tiles_ambiguous,
         }
         if nd.ndim >= 1:
             out["n_dropped_per_shard"] = [int(x) for x in nd]
@@ -195,11 +212,16 @@ class FilterSession:
                 cost_mode=plan.cost_mode, backend=plan.engine,
                 adaptive=plan.adaptive, compact_output=plan.compact,
                 compact_capacity=plan.capacity, compact_slack=plan.slack,
-                exchange=plan.exchange)
+                exchange=plan.exchange, skip_tier=plan.skip_tier)
             # an explicit mesh forces the shard_mapped execution layer even
             # for shards=1 (a live 1-device mesh is how the sharded path is
             # exercised without multiple devices — benches/tests rely on it)
             if plan.shards > 1 or mesh is not None:
+                if plan.skip_tier != "off":
+                    raise ValueError(
+                        "skip_tier needs the unsharded execution layer: "
+                        "a mesh forces shard_map, whose static shapes the "
+                        "per-step ambiguous-tile sync cannot drive")
                 import jax
                 if mesh is None:
                     mesh = jax.make_mesh((plan.shards,), (plan.axis_name,))
@@ -215,6 +237,8 @@ class FilterSession:
             else:
                 self.filter = AdaptiveFilter(list(plan.predicates), cfg)
         self._jit_tokenize = None   # sharded per-shard tokenize (lazy)
+        # skip_tier="auto": the online us_per_row tuner (lazy; host-owned)
+        self._skip_tuner = None
         # host-side mirror of rows_into_epoch for the deferred-exchange
         # boundary check: rows per shard are deterministic (every step adds
         # the static local batch width), so the due-test needs NO
@@ -253,7 +277,7 @@ class FilterSession:
             adaptive=cfg.adaptive, cost_mode=cfg.cost_mode,
             compact=cfg.compact_output, capacity=cfg.compact_capacity,
             slack=cfg.compact_slack, exchange=cfg.exchange,
-            tokenize=tokenize)
+            tokenize=tokenize, skip_tier=cfg.skip_tier)
         return cls(plan, _filter=filt)
 
     def with_tokenize(self, tokenize: TokenizeSpec) -> "FilterSession":
@@ -267,12 +291,42 @@ class FilterSession:
         self._rows_local = 0
         return self.filter.init_state()
 
+    # ------------------------------------------------------------ skip tier
+    def _skip_step_mode(self) -> str:
+        """The skip-tier arm for the CURRENT step ("off" disables it).
+
+        Fixed tiers pass through; "auto" asks the online tuner
+        (``skip_tier.SkipTierTuner``) which arm to run — it alternates
+        during warmup, then follows the faster measured us_per_row, and
+        structurally forces "off" when the observed ambiguous-tile
+        fraction says the tier cannot pay (shuffled layouts).
+        """
+        from repro.core import skip_tier as skip_tier_lib
+
+        tier = self.plan.skip_tier
+        if tier in ("off", None) or self.sharded:
+            return "off"
+        if tier != "auto":
+            return tier
+        if self._skip_tuner is None:
+            self._skip_tuner = skip_tier_lib.SkipTierTuner(
+                self._core.skip_on_mode())
+        return self._skip_tuner.choose()
+
+    @property
+    def skip_tier_active(self) -> str:
+        """The arm a step would run right now (bench/telemetry hook)."""
+        if self.plan.skip_tier != "auto":
+            return "off" if self.sharded else self.plan.skip_tier
+        return self._skip_tuner.active_mode if self._skip_tuner else "auto"
+
     # ---------------------------------------------------------------- step
     def step(self, state: OrderState, batch) -> tuple[OrderState, StepResult]:
         """One micro-batch through the whole compiled plan.
 
         ``batch``: f32[C, R] (host or device; [C, S·R] when sharded, shard i
-        owning the contiguous block i). Drives — in order — the jitted
+        owning the contiguous block i). Drives — in order — the skip-tier
+        triage (when the plan enables it), the jitted
         filter(+compact+tokenize) step, the deferred epoch exchange if one
         is due, and the auto-capacity retune; returns the post-exchange
         state and a uniform ``StepResult``.
@@ -285,10 +339,27 @@ class FilterSession:
         prev = state
         packed = n_kept = tokens = n_tokens = None
         cap = None
+        skip_mode = self._skip_step_mode()
+        auto = self.plan.skip_tier == "auto" and not self.sharded
+        if auto:
+            import time
+            t0 = time.perf_counter()
+        info = None
+        if skip_mode != "off":
+            # the tier's one host sync: the triage result sizes the jnp
+            # gather width (quantized — bounded jit cache); the pallas
+            # engine predicates in-kernel and skips the sync entirely
+            info = f._jit_triage(cols, bloom=skip_mode == "zonemap+bloom")
+            amb_cap = f.skip_amb_cap(info, n_local)
         if self.plan.compact:
             cap = f.resolve_capacity(n_local)
-            state, packed, n_kept, mask, metrics = f._jit_compact(
-                state, cols, capacity=cap)
+            if info is not None:
+                state, packed, n_kept, mask, metrics = f._jit_skip_compact(
+                    state, cols, info.pass_tiles, info.fail_tiles,
+                    amb_cap=amb_cap, capacity=cap)
+            else:
+                state, packed, n_kept, mask, metrics = f._jit_compact(
+                    state, cols, capacity=cap)
             if self.plan.tokenize is not None:
                 if self.sharded:
                     tokens, n_tokens = self._tokenize_sharded(packed, n_kept)
@@ -297,8 +368,29 @@ class FilterSession:
                     ts = self.plan.tokenize
                     tokens, n_tokens = tokenizer.tokens_from_padded(
                         packed, n_kept, ts.vocab_size, ts.tokens_per_row)
+        elif info is not None:
+            state, mask, metrics = f._jit_skip(
+                state, cols, info.pass_tiles, info.fail_tiles,
+                amb_cap=amb_cap)
         else:
             state, mask, metrics = f.jit_step(state, cols)
+        if auto:
+            # honest wall-clock per arm: the tuner compares ARMS, so both
+            # pay the same sync; ambiguous fraction comes along for the
+            # structural shutoff on adversarial (shuffled) layouts
+            import jax
+            jax.block_until_ready(mask)
+            dt = time.perf_counter() - t0
+            ambig_frac = None
+            if skip_mode != "off":
+                n_amb = float(np.sum(np.asarray(metrics.n_tiles_ambiguous)))
+                n_tot = n_amb \
+                    + float(np.sum(np.asarray(metrics.n_tiles_pass))) \
+                    + float(np.sum(np.asarray(metrics.n_tiles_fail)))
+                ambig_frac = n_amb / max(n_tot, 1.0)
+            self._skip_tuner.observe(
+                skip_mode, dt * 1e6 / max(int(cols.shape[1]), 1),
+                ambig_frac)
         if self._core.exchange_deferred:
             # host-counted boundary: no per-step device sync (the jitted
             # exchange itself checks/derives everything it needs). One

@@ -56,7 +56,7 @@ from repro.compat import shard_map
 from repro.core.adaptive_filter import (AdaptiveFilter, AdaptiveFilterConfig,
                                         drive_exchange)
 from repro.core.ordering import OrderState
-from repro.core.plan import validate_combo, warn_deprecated
+from repro.core.plan import validate_combo
 from repro.core.predicates import Predicate
 
 
@@ -104,7 +104,8 @@ class ShardedAdaptiveFilter:
                        compact_capacity=cfg.compact_capacity,
                        compact_slack=cfg.compact_slack,
                        exchange=cfg.exchange,
-                       shards=max(self.num_shards, 2))
+                       shards=max(self.num_shards, 2),
+                       skip_tier=cfg.skip_tier)
         self._jit_step = None
         self._jit_step_compact = None
         self._jit_exchange = None
@@ -173,16 +174,6 @@ class ShardedAdaptiveFilter:
             self._jit_step_compact = jax.jit(
                 self.sharded_step_compact, static_argnames=("capacity",))
         return self._jit_step_compact
-
-    @property
-    def jit_step_compact(self):
-        """Deprecated: use ``build_session(plan).step`` (one entry point)."""
-        warn_deprecated(
-            "ShardedAdaptiveFilter.jit_step_compact",
-            "ShardedAdaptiveFilter.jit_step_compact is deprecated; declare "
-            "compact=True (and shards=N) on a FilterPlan and call "
-            "session.step (see README 'One plan, one session')")
-        return self._jit_compact
 
     # ------------------------------------------------------ deferred epochs
     def _sharded_exchange(self, state: OrderState, use_stats=None):

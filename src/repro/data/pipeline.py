@@ -46,7 +46,7 @@ import numpy as np
 
 log = logging.getLogger(__name__)
 
-from repro.core.plan import TokenizeSpec, warn_deprecated
+from repro.core.plan import TokenizeSpec
 from repro.data import tokenizer
 from repro.data.stream import LogStream
 
@@ -350,30 +350,3 @@ def make_pipeline(session, *, total_rows: int, batch_rows: int,
     if session.sharded:
         return ShardedPipeline(streams, session, **kw)
     return Pipeline(streams[0], session, **kw)
-
-
-def make_sharded_pipeline(filt, *, total_rows: int,
-                          batch_rows: int, batch_size: int, seq_len: int,
-                          vocab_size: int, seed: int = 0, drift=None,
-                          tokens_per_row: int = 8,
-                          device_tokenize: bool = False) -> ShardedPipeline:
-    """Deprecated: build a ``FilterPlan`` (shards=N, tokenize=...) and call
-    ``make_pipeline(build_session(plan), ...)`` instead.
-
-    Thin delegating shim (DeprecationWarning once) — see the README
-    migration table.
-    """
-    warn_deprecated(
-        "make_sharded_pipeline",
-        "make_sharded_pipeline is deprecated; declare shards/tokenize on a "
-        "FilterPlan and call make_pipeline(build_session(plan), ...) "
-        "(see README 'One plan, one session')")
-    from repro.core.session import FilterSession
-
-    session = FilterSession.from_filter(
-        filt, tokenize=TokenizeSpec(vocab_size, tokens_per_row)
-        if device_tokenize else None)
-    return make_pipeline(session, total_rows=total_rows,
-                         batch_rows=batch_rows, batch_size=batch_size,
-                         seq_len=seq_len, vocab_size=vocab_size, seed=seed,
-                         drift=drift, tokens_per_row=tokens_per_row)

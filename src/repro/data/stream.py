@@ -17,6 +17,21 @@ Drift kinds:
   sine    — column means glide sinusoidally over rows (smooth drift)
   regime  — parameters switch between two regimes every ``period_rows``
             (abrupt drift; the case momentum is designed to survive)
+
+Layouts (``layout=``) — the *physical row order within a batch*, the knob
+the tile-statistics skip tier (``core.skip_tier``) lives or dies by. Row
+SETS are identical across layouts (a pure permutation), so selectivities,
+adopted orders, and survivors-as-a-set are layout-invariant; only the
+per-128-row-tile value locality changes:
+
+  iid       — generator order (exchangeable draws; no locality). Default,
+              bit-identical to the pre-layout stream.
+  clustered — rows sorted by (int, date): the sorted-ingest case — most
+              tiles become provably pass/fail under zone maps.
+  zordered  — Morton (Z-order) interleave of the date/int rank spaces:
+              multi-column locality, the database clustering middle ground.
+  shuffled  — explicit random permutation (adversarial for zone maps;
+              tiles stay ambiguous and the skip tier should disable).
 """
 
 from __future__ import annotations
@@ -95,12 +110,53 @@ def _drift_shift(drift: DriftConfig, row_mid: float) -> tuple[float, float, floa
     return (drift.amplitude * sign, -drift.amplitude * sign, 0.2 * sign)
 
 
+LAYOUTS = ("iid", "clustered", "zordered", "shuffled")
+
+
+def _part1by1(v: np.ndarray) -> np.ndarray:
+    """Spread the low 16 bits of ``v`` over even bit positions (u32)."""
+    v = v.astype(np.uint32) & np.uint32(0x0000FFFF)
+    v = (v | (v << 8)) & np.uint32(0x00FF00FF)
+    v = (v | (v << 4)) & np.uint32(0x0F0F0F0F)
+    v = (v | (v << 2)) & np.uint32(0x33333333)
+    v = (v | (v << 1)) & np.uint32(0x55555555)
+    return v
+
+
+def _layout_order(cols: np.ndarray, layout: str, rng) -> np.ndarray | None:
+    """Row permutation realizing ``layout`` (None → keep generator order)."""
+    if layout == "iid":
+        return None
+    if layout == "shuffled":
+        return rng.permutation(cols.shape[1])
+    if layout == "clustered":
+        # primary sort on the int column, date breaks ties — the sorted
+        # ingest a warehouse's clustered index produces
+        return np.lexsort((cols[0], cols[1]))
+    if layout == "zordered":
+        # Morton interleave of the 16-bit quantized date/int RANK spaces
+        # (ranks, not raw values: Z-order locality should not depend on
+        # the columns' absolute scales)
+        n = cols.shape[1]
+        q = np.empty((2, n), np.uint32)
+        for i in (0, 1):
+            q[i] = (np.argsort(np.argsort(cols[i], kind="stable"),
+                               kind="stable").astype(np.uint64)
+                    * 65535 // max(n - 1, 1)).astype(np.uint32)
+        morton = _part1by1(q[0]) | (_part1by1(q[1]) << np.uint32(1))
+        return np.argsort(morton, kind="stable")
+    raise ValueError(f"unknown layout {layout!r}; pick from {LAYOUTS}")
+
+
 def gen_batch(seed: int, batch_index: int, row_start: int, n_rows: int,
-              drift: DriftConfig = DriftConfig()) -> np.ndarray:
+              drift: DriftConfig = DriftConfig(),
+              layout: str = "iid") -> np.ndarray:
     """Generate rows [row_start, row_start+n_rows) as f32[3, n_rows].
 
-    Counter-based: depends only on (seed, batch_index, drift), never on
-    generator history → restartable and shardable.
+    Counter-based: depends only on (seed, batch_index, drift, layout),
+    never on generator history → restartable and shardable. ``layout``
+    permutes rows *within the batch* (see the module docstring) — the row
+    set is identical across layouts.
     """
     rng = np.random.Generator(np.random.Philox(key=[seed, batch_index]))
     d_shift, i_shift, s_shift = _drift_shift(drift, row_start + n_rows / 2)
@@ -111,7 +167,9 @@ def gen_batch(seed: int, batch_index: int, row_start: int, n_rows: int,
     intc = rng.normal(imean + i_shift * istd, istd, n_rows)
     strh = (rng.integers(0, int(STR_MOD), n_rows).astype(np.float64)
             + s_shift * STR_MOD) % STR_MOD
-    return np.stack([date, intc, strh]).astype(np.float32)
+    cols = np.stack([date, intc, strh]).astype(np.float32)
+    order = _layout_order(cols, layout, rng)
+    return cols if order is None else cols[:, order]
 
 
 class LogStream:
@@ -124,13 +182,17 @@ class LogStream:
 
     def __init__(self, total_rows: int, batch_rows: int = 65536, seed: int = 0,
                  drift: DriftConfig = DriftConfig(), shard_id: int = 0,
-                 num_shards: int = 1, start_batch: int = 0):
+                 num_shards: int = 1, start_batch: int = 0,
+                 layout: str = "iid"):
         if total_rows % batch_rows:
             total_rows = (total_rows // batch_rows) * batch_rows
+        if layout not in LAYOUTS:
+            raise ValueError(f"unknown layout {layout!r}; pick from {LAYOUTS}")
         self.total_rows = total_rows
         self.batch_rows = batch_rows
         self.seed = seed
         self.drift = drift
+        self.layout = layout
         self.shard_id = shard_id
         self.num_shards = num_shards
         self.cursor = start_batch  # global batch index; checkpointable
@@ -154,5 +216,5 @@ class LogStream:
             if b % self.num_shards != self.shard_id:
                 continue
             cols = gen_batch(self.seed, b, b * self.batch_rows,
-                             self.batch_rows, self.drift)
+                             self.batch_rows, self.drift, self.layout)
             yield RecordBatch(cols, row_offset=b * self.batch_rows)

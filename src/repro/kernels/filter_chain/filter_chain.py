@@ -69,6 +69,48 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.core import predicates as pred_lib
 
 DEFAULT_TILE = 2048  # rows per grid step; multiple of 128 (VPU lanes)
+STAT_TILE = 128      # zone-map statistics granularity (= skip_tier.SKIP_TILE)
+
+
+def _stats_kernel(cols_ref, min_ref, max_ref, *, tile: int):
+    """Skip-tier pre-pass: per-STAT_TILE column min/max for one grid tile.
+
+    One (C, TILE) tile in VMEM → (C, TILE/STAT_TILE) zone-map summaries.
+    The reshape splits the lane dimension into (sub, 128) so each reduction
+    runs over full VPU lanes; a production Mosaic kernel would fuse this
+    into the ingest DMA, but as a separate launch it still reads each byte
+    exactly once and writes only TILE/STAT_TILE summary lanes per column.
+    """
+    sub = tile // STAT_TILE
+    x = cols_ref[:, :]                                   # f32[C, TILE]
+    t3 = x.reshape(cols_ref.shape[0], sub, STAT_TILE)
+    min_ref[:, :] = t3.min(axis=2)
+    max_ref[:, :] = t3.max(axis=2)
+
+
+def tile_stats_pallas(columns: jnp.ndarray, *, tile: int = DEFAULT_TILE,
+                      interpret: bool = True):
+    """Zone-map summaries of f32[C, Rp] (Rp % tile == 0).
+
+    Returns (mins f32[C, Rp/STAT_TILE], maxs f32[C, Rp/STAT_TILE]).
+    """
+    n_cols, n_rows_p = columns.shape
+    if n_rows_p % tile:
+        raise ValueError(f"padded rows {n_rows_p} not a multiple of {tile}")
+    n_tiles = n_rows_p // tile
+    sub = tile // STAT_TILE
+    kernel = functools.partial(_stats_kernel, tile=tile)
+    out_spec = pl.BlockSpec((n_cols, sub), lambda i: (0, i))
+    out_shape = jax.ShapeDtypeStruct((n_cols, n_tiles * sub), jnp.float32)
+    return pl.pallas_call(
+        kernel,
+        grid=(n_tiles,),
+        in_specs=[pl.BlockSpec((n_cols, tile), lambda i: (0, i))],
+        out_specs=[out_spec, out_spec],
+        out_shape=[out_shape, out_shape],
+        interpret=interpret,
+        name="adaptive_filter_tile_stats",
+    )(columns)
 
 
 def _eval_pred_tile(cols_ref, col_idx, op, t1, t2, rounds):
@@ -101,12 +143,16 @@ def _eval_pred_tile(cols_ref, col_idx, op, t1, t2, rounds):
 def _kernel(# --- SMEM scalar/spec refs ---
             col_ref, op_ref, t1_ref, t2_ref, rounds_ref, perm_ref, group_ref,
             meta_ref,  # i32[4]: (n_rows, collect_rate, sample_phase, mode)
-            # --- VMEM data refs ---
-            cols_ref,
-            # --- outputs ---
-            mask_ref, active_ref, cut_ref, gcut_ref, nmon_ref,
-            *compact_refs,  # (packed_ref, cnt_ref) when compact=True
-            n_preds: int, tile: int, groups: tuple, fill: float = 0.0):
+            # --- skip-tier SMEM refs (skip=True), VMEM data, outputs ---
+            *refs,  # [pass_ref, fail_ref,] cols_ref, mask_ref, active_ref,
+                    # cut_ref, gcut_ref, nmon_ref [, packed_ref, cnt_ref]
+            n_preds: int, tile: int, groups: tuple, fill: float = 0.0,
+            skip: bool = False):
+    if skip:
+        pass_ref, fail_ref = refs[0], refs[1]
+        refs = refs[2:]
+    cols_ref, mask_ref, active_ref, cut_ref, gcut_ref, nmon_ref = refs[:6]
+    compact_refs = refs[6:]   # (packed_ref, cnt_ref) when compact=True
     t = pl.program_id(0)
     n_rows = meta_ref[0]
     collect_rate = meta_ref[1]
@@ -118,8 +164,31 @@ def _kernel(# --- SMEM scalar/spec refs ---
     gidx = t * tile + lane
     valid = gidx < n_rows                                    # bool(1, TILE)
 
+    # ------------------------------------------------------ skip-tier lanes
+    # Zone-map triage (skip-tier pre-pass) resolved this grid tile's
+    # STAT_TILE sub-tiles host-of-kernel; broadcast the i32 decisions from
+    # SMEM into lane masks. Decided sub-tiles start with no pending rows, so
+    # the existing ``alive > 0`` cond gives tile-granular skip for free — a
+    # fully decided grid tile evaluates ZERO predicates (with BlockSpec
+    # streaming the tile regardless; a Mosaic lowering would gate the DMA on
+    # the same SMEM scalars so failed tiles never enter VMEM column-wide).
+    pass_lane = None
+    if skip:
+        sub = tile // STAT_TILE
+        segs_p, segs_f = [], []
+        for j in range(sub):                 # static unroll: SMEM scalars
+            segs_p.append(jnp.full((1, STAT_TILE), pass_ref[t * sub + j],
+                                   jnp.int32))
+            segs_f.append(jnp.full((1, STAT_TILE), fail_ref[t * sub + j],
+                                   jnp.int32))
+        pass_lane = jnp.concatenate(segs_p, axis=1) > 0
+        fail_lane = jnp.concatenate(segs_f, axis=1) > 0
+        decided = jnp.logical_or(pass_lane, fail_lane)
+
     # ----------------------------------------------------------- chain lane
-    mask = valid                              # survivors of closed groups
+    # survivors of closed groups; decided sub-tiles bypass the row level
+    mask = valid if not skip \
+        else jnp.logical_and(valid, jnp.logical_not(decided))
     group_or = jnp.zeros((1, tile), bool)     # passes within the open group
     for k in range(n_preds):                 # P static → unrolled on-chip
         pidx = perm_ref[k]
@@ -146,6 +215,11 @@ def _kernel(# --- SMEM scalar/spec refs ---
         new_mask = jnp.logical_and(mask, group_or)
         mask = new_mask if closes is True \
             else jnp.where(closes, new_mask, mask)
+    if skip:
+        # bulk-keep provably-passing sub-tiles (valid rows only — zero
+        # padding can satisfy a proof but never survives); the in-kernel
+        # compaction below then bulk-copies them with no predicate work.
+        mask = jnp.logical_or(mask, jnp.logical_and(pass_lane, valid))
     mask_ref[0, :] = mask[0].astype(jnp.int8)
 
     # ------------------------------------------------- in-kernel compaction
@@ -213,11 +287,15 @@ def _kernel(# --- SMEM scalar/spec refs ---
 def filter_chain_pallas(columns: jnp.ndarray, specs, perm: jnp.ndarray,
                         meta: jnp.ndarray, *, tile: int = DEFAULT_TILE,
                         interpret: bool = True, compact: bool = False,
-                        fill: float = 0.0):
+                        fill: float = 0.0, skip_decisions=None):
     """Launch the fused chain kernel.
 
     columns: f32[C, R_padded] with R_padded % tile == 0.
     meta:    i32[4] = (n_rows_actual, collect_rate, sample_phase, mode).
+    skip_decisions: optional (pass i32[Rp/STAT_TILE], fail i32[Rp/STAT_TILE])
+    from the zone-map triage pre-pass — decided sub-tiles bypass the
+    row-level chain (the monitor lane still samples them row-level, keeping
+    ordering statistics identical with the tier on or off).
     Returns (mask i8[1,Rp], active f32[n_tiles,P], cut f32[n_tiles,P],
              gcut f32[n_tiles,G], nmon f32[n_tiles,1]); with
     ``compact=True`` additionally (packed f32[C,Rp] — survivors packed to
@@ -255,21 +333,27 @@ def filter_chain_pallas(columns: jnp.ndarray, specs, perm: jnp.ndarray,
         out_shape += [jax.ShapeDtypeStruct((n_cols, n_rows_p), jnp.float32),
                       jax.ShapeDtypeStruct((n_tiles, 1), jnp.int32)]
 
+    skip = skip_decisions is not None
     kernel = functools.partial(_kernel, n_preds=n_preds, tile=tile,
-                               groups=groups, fill=fill)
+                               groups=groups, fill=fill, skip=skip)
+    in_specs = [smem(), smem(), smem(), smem(), smem(), smem(), smem(),
+                smem()]
+    args = [specs.column, specs.op, specs.t1, specs.t2, specs.rounds, perm,
+            garr, meta]
+    if skip:
+        in_specs += [smem(), smem()]
+        args += [skip_decisions[0], skip_decisions[1]]
+    in_specs.append(pl.BlockSpec((n_cols, tile), lambda i: (0, i)))
+    args.append(columns)
     return pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            smem(), smem(), smem(), smem(), smem(), smem(), smem(), smem(),
-            pl.BlockSpec((n_cols, tile), lambda i: (0, i)),
-        ],
+        in_specs=in_specs,
         out_specs=out_specs,
         out_shape=out_shape,
         interpret=interpret,
-        name="adaptive_filter_chain",
-    )(specs.column, specs.op, specs.t1, specs.t2, specs.rounds, perm, garr,
-      meta, columns)
+        name="adaptive_filter_chain_skip" if skip else "adaptive_filter_chain",
+    )(*args)
 
 
 def _gather_kernel(off_ref, packed_ref, out_ref, *, tile: int, capacity: int,

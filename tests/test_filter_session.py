@@ -2,7 +2,7 @@
 
 Fast tier: plan validation (single-sourced cross-field rules), the
 four-way ``session.step`` parity pin (jnp/pallas × sharded/unsharded,
-mask and compact paths), the uniform StepResult ABI, deprecation shims,
+mask and compact paths), the uniform StepResult ABI, shim end-of-life,
 versioned checkpoints (v1 blobs, fingerprint guard), and the pure
 elastic-reshard math. The multi-device 2↔4-shard elastic restores fork
 4-forced-device subprocesses (slow tier, like tests/test_sharded_filter.py).
@@ -12,7 +12,6 @@ import os
 import subprocess
 import sys
 import textwrap
-import warnings
 
 import numpy as np
 import pytest
@@ -153,13 +152,11 @@ def test_session_step_matches_legacy(backend, sharded):
         lstate, sstate = legacy.init_state(), sess.init_state()
         for b in range(3):
             cols = jnp.asarray(gen_batch(0, b, b * rows, rows))
-            with warnings.catch_warnings():
-                warnings.simplefilter("ignore", DeprecationWarning)
-                if compact:
-                    lstate, lpacked, lkept, lmask, lmet = \
-                        legacy.jit_step_compact(lstate, cols)
-                else:
-                    lstate, lmask, lmet = legacy.jit_step(lstate, cols)
+            if compact:
+                lstate, lpacked, lkept, lmask, lmet = \
+                    legacy._jit_compact(lstate, cols)
+            else:
+                lstate, lmask, lmet = legacy.jit_step(lstate, cols)
             sstate, res = sess.step(sstate, cols)
             np.testing.assert_array_equal(np.asarray(lmask), res.mask_np)
             np.testing.assert_array_equal(np.asarray(lmet.perm),
@@ -228,30 +225,21 @@ def test_step_result_reports_dropped():
 
 
 # ============================================================== deprecation
-def test_shims_warn_once_and_delegate():
-    import jax.numpy as jnp
+def test_shims_are_gone():
+    """Deprecation end-of-life: the warn-once shims removed at their EOL
+    must STAY removed (no resurrection in a refactor)."""
+    from repro.core import AdaptiveFilter, ShardedAdaptiveFilter
+    from repro.data import pipeline as pipeline_lib
 
-    from repro.core import AdaptiveFilter, AdaptiveFilterConfig, \
-        paper_filters_4
-    from repro.core import plan as plan_lib
-    from repro.data.pipeline import make_sharded_pipeline  # noqa: F401
-
-    filt = AdaptiveFilter(paper_filters_4("fig1"), AdaptiveFilterConfig(
-        ordering=_ordering(), compact_output=True))
-    cols = jnp.asarray(np.zeros((3, 256), np.float32))
-    plan_lib._WARNED.discard("AdaptiveFilter.step_compact")
-    with warnings.catch_warnings(record=True) as w:
-        warnings.simplefilter("always")
-        filt.step_compact(filt.init_state(), cols)
-        filt.step_compact(filt.init_state(), cols)
-    dep = [x for x in w if issubclass(x.category, DeprecationWarning)
-           and "step_compact" in str(x.message)]
-    assert len(dep) == 1            # once per process, not per call
+    assert not hasattr(AdaptiveFilter, "step_compact")
+    assert not hasattr(AdaptiveFilter, "jit_step_compact")
+    assert not hasattr(ShardedAdaptiveFilter, "jit_step_compact")
+    assert not hasattr(pipeline_lib, "make_sharded_pipeline")
 
 
 def test_internal_callers_are_shim_free():
     """Acceptance grep: no internal caller (launch/, benchmarks/,
-    examples/, data/) invokes the deprecated step_compact /
+    examples/, data/) invokes the removed step_compact /
     jit_step_compact surfaces — everything routes through build_session."""
     root = os.path.join(os.path.dirname(__file__), "..")
     offenders = []

@@ -81,7 +81,7 @@ def test_compact_output_matches_boolean_mask(backend):
                                                ordering=ordering))
     state = filt.init_state()
     cols = jnp.asarray(gen_batch(0, 0, 0, 4096))
-    _, packed, n_kept, mask, _ = filt.jit_step_compact(state, cols)
+    _, packed, n_kept, mask, _ = filt._jit_compact(state, cols)
     _, mask_ref, _ = filt.jit_step(state, cols)
 
     assert np.array_equal(np.asarray(mask), np.asarray(mask_ref))
@@ -100,7 +100,7 @@ def test_compact_capacity_saturates():
     filt = AdaptiveFilter(paper_filters_4("fig1"),
                           AdaptiveFilterConfig(compact_output=True,
                                                compact_capacity=8))
-    _, packed, n_kept, mask, _ = filt.jit_step_compact(
+    _, packed, n_kept, mask, _ = filt._jit_compact(
         filt.init_state(), jnp.asarray(gen_batch(0, 0, 0, 4096)))
     assert packed.shape[1] == 8
     assert int(n_kept) == 8                     # > 8 survivors → saturates
@@ -238,7 +238,8 @@ def test_sharded_compaction_and_pipeline_roundtrip_4dev():
         import jax, numpy as np
         from repro.core import (AdaptiveFilterConfig, OrderingConfig,
                                 ShardedAdaptiveFilter, paper_filters_4)
-        from repro.data.pipeline import make_sharded_pipeline
+        from repro.core.session import FilterSession
+        from repro.data.pipeline import make_pipeline
         from repro.data.stream import DriftConfig
 
         ordering = OrderingConfig(collect_rate=100, calculate_rate=50_000)
@@ -250,9 +251,10 @@ def test_sharded_compaction_and_pipeline_roundtrip_4dev():
                                        compact_output=compact)
             filt = ShardedAdaptiveFilter(paper_filters_4("fig1"), cfg,
                                          mesh=mesh)
-            return make_sharded_pipeline(
-                filt, total_rows=1_048_576, batch_rows=65536, batch_size=4,
-                seq_len=64, vocab_size=1000, drift=drift)
+            return make_pipeline(
+                FilterSession.from_filter(filt), total_rows=1_048_576,
+                batch_rows=65536, batch_size=4, seq_len=64, vocab_size=1000,
+                drift=drift)
 
         pipe = mk(compact=True)
         it = iter(pipe)

@@ -50,7 +50,7 @@ def test_three_way_compaction_parity(backend, capacity):
     state = filt.init_state()
     cols = jnp.asarray(gen_batch(0, 0, 0, rows))
 
-    _, packed, n_kept, mask, metrics = filt.jit_step_compact(state, cols)
+    _, packed, n_kept, mask, metrics = filt._jit_compact(state, cols)
     mask_np = np.asarray(mask)
 
     ref, n_ref = compact_fixed_ref(cols, mask_np, cap)          # host oracle
@@ -237,8 +237,8 @@ def test_auto_capacity_tracks_pass_rate():
     # auto mode must not let a capacity=None trace pin a stale width —
     # callers have to thread resolve_capacity() per call
     with pytest.raises(ValueError, match="resolve_capacity"):
-        filt.step_compact(filt.init_state(),
-                          jnp.zeros((4, 256), jnp.float32))
+        filt._step_compact(filt.init_state(),
+                           jnp.zeros((4, 256), jnp.float32))
 
     batches = [np.asarray(gen_batch(0, b, b * rows, rows)) for b in range(6)]
     metrics = [m for _, _, m in filt.process_stream(batches)]
@@ -279,7 +279,9 @@ def test_device_tokenize_matches_host_pipeline():
     from repro.core import (AdaptiveFilter, AdaptiveFilterConfig,
                             OrderingConfig, ShardedAdaptiveFilter,
                             paper_filters_4)
-    from repro.data.pipeline import Pipeline, make_sharded_pipeline
+    from repro.core.plan import TokenizeSpec
+    from repro.core.session import FilterSession
+    from repro.data.pipeline import Pipeline, make_pipeline
     from repro.data.stream import DriftConfig, LogStream
 
     ordering = OrderingConfig(collect_rate=100, calculate_rate=100_000)
@@ -302,10 +304,11 @@ def test_device_tokenize_matches_host_pipeline():
         cfg = AdaptiveFilterConfig(ordering=ordering, compact_output=True)
         mesh = jax.make_mesh((1,), ("data",))
         filt = ShardedAdaptiveFilter(paper_filters_4("fig1"), cfg, mesh=mesh)
-        return make_sharded_pipeline(
-            filt, total_rows=131072, batch_rows=16384, batch_size=4,
-            seq_len=64, vocab_size=1000, drift=DriftConfig(),
-            device_tokenize=devtok)
+        session = FilterSession.from_filter(
+            filt, tokenize=TokenizeSpec(1000, 8) if devtok else None)
+        return make_pipeline(
+            session, total_rows=131072, batch_rows=16384, batch_size=4,
+            seq_len=64, vocab_size=1000, drift=DriftConfig())
 
     sh = [b for _, b in zip(range(3), iter(mk_sharded(False)))]
     sd = [b for _, b in zip(range(3), iter(mk_sharded(True)))]

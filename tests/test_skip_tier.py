@@ -1,0 +1,406 @@
+"""Tile-statistics skip tier: zone maps + Bloom bits in front of the chain.
+
+Fast tier. The tier's one invariant — survivors, tokens, and ordering
+statistics are BIT-IDENTICAL with the tier on or off, on every engine —
+plus the tri-state proof edge cases (all-pass / all-fail / boundary-value
+tiles), the monitor lane's immunity to skipping, the ``auto`` tuner's
+structural fallback to "off" on shuffled layouts, and the layout
+generator's row-set invariance.
+"""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.ordering import OrderingConfig
+
+
+def _ordering(collect_rate=100, calculate_rate=4096):
+    return OrderingConfig(collect_rate=collect_rate,
+                          calculate_rate=calculate_rate)
+
+
+# ===================================================== engine-level parity
+@pytest.mark.parametrize("engine", ["numpy", "jnp", "pallas"])
+@pytest.mark.parametrize("layout", ["clustered", "zordered", "shuffled"])
+@pytest.mark.parametrize("bloom", [False, True])
+def test_skip_mask_bit_identical(engine, layout, bloom):
+    """run_chain_skip == run_chain on mask AND monitor counters, for every
+    engine × layout × bloom — aligned and ragged widths."""
+    import jax.numpy as jnp
+
+    from repro.core import paper_filters_4
+    from repro.core import skip_tier
+    from repro.core.engine import get_engine
+    from repro.core.engine.base import MonitorSpec
+    from repro.core.predicates import pack
+    from repro.data.stream import gen_batch
+
+    specs = pack(paper_filters_4("fig1"))
+    perm = np.arange(specs.n, dtype=np.int32)
+    mon = MonitorSpec(collect_rate=100, sample_phase=0)
+    eng = get_engine(engine)
+
+    for rows in (4096, 4000):            # aligned + ragged tail
+        cols = gen_batch(0, 0, 0, rows, layout=layout)
+        c = cols if engine == "numpy" else jnp.asarray(cols)
+        base = eng.run_chain(c, specs, perm, mon)
+        info = eng.triage(c, specs, bloom=bloom)
+        if engine == "jnp":
+            cap = skip_tier.quantize_amb_cap(int(info.n_ambiguous),
+                                             math.ceil(rows / 128))
+            res = eng.run_chain_skip(c, specs, perm, mon, info, amb_cap=cap)
+        else:
+            res = eng.run_chain_skip(c, specs, perm, mon, info)
+        np.testing.assert_array_equal(np.asarray(base.mask),
+                                      np.asarray(res.mask))
+        for field in ("cut_counts", "group_cut_counts", "n_monitored",
+                      "monitor_cost"):
+            np.testing.assert_allclose(np.asarray(getattr(base, field)),
+                                       np.asarray(getattr(res, field)))
+        # triage must have decided something on clustered data (aligned
+        # widths only — ragged-tail tile counts may differ per engine)
+        if layout in ("clustered", "zordered") and rows == 4096:
+            assert int(np.asarray(res.n_tiles_fail)) > 0
+        n_amb = int(np.asarray(res.n_tiles_ambiguous))
+        assert n_amb >= 1                # hashmix is never provable... but
+        # decided tiles contribute zero row-level work
+        assert float(np.asarray(res.work_units)) \
+            <= float(np.asarray(base.work_units)) + 1e-6
+
+
+def test_skip_counters_agree_across_engines():
+    """Same batch → identical (pass, fail, ambiguous) tile counts from the
+    numpy reference, the jnp triage, and the pallas stats kernel."""
+    import jax.numpy as jnp
+
+    from repro.core import paper_filters_4
+    from repro.core.engine import get_engine
+    from repro.core.predicates import pack
+    from repro.data.stream import gen_batch
+
+    specs = pack(paper_filters_4("fig1"))
+    cols = gen_batch(0, 0, 0, 4096, layout="clustered")
+    outs = []
+    for engine in ("numpy", "jnp", "pallas"):
+        c = cols if engine == "numpy" else jnp.asarray(cols)
+        info = get_engine(engine).triage(c, specs, bloom=True)
+        outs.append((int(np.sum(np.asarray(info.pass_tiles))),
+                     int(np.sum(np.asarray(info.fail_tiles))),
+                     int(np.asarray(info.n_ambiguous))))
+    assert outs[0] == outs[1] == outs[2]
+    assert outs[0][1] > 0                 # clustered data resolves tiles
+
+
+# ============================================== tri-state proof edge cases
+def _triage_np(cols, preds, *, bloom=False):
+    import numpy as np
+
+    from repro.core import skip_tier
+    from repro.core.predicates import pack
+    return skip_tier.triage(np.asarray(cols, np.float32), pack(preds),
+                            bloom=bloom, xp=np)
+
+
+def test_all_pass_all_fail_boundary_tiles():
+    """Hand-built 128-row tiles: provably-pass, provably-fail, and
+    boundary-value (threshold sitting exactly on the tile extremum) tiles
+    classify exactly as the tri-state table says."""
+    from repro.core.predicates import OP_GT, OP_LT, Predicate
+
+    t = 0.5
+    preds = [Predicate("gt", column=0, op=OP_GT, t1=t)]
+    tiles = np.concatenate([
+        np.full(128, 1.0),      # all > t        → provably pass
+        np.full(128, 0.0),      # all <= t       → provably fail
+        np.full(128, t),        # max == t: x > t false everywhere → fail
+        np.linspace(0.0, 1.0, 128),   # straddles → ambiguous
+        np.full(128, np.nextafter(np.float32(t), np.float32(1.0))),
+        # ^ min one f32 ulp above t → pass
+    ])
+    info = _triage_np(np.stack([tiles]), preds)
+    assert list(np.asarray(info.pass_tiles)) == [True, False, False, False,
+                                                 True]
+    assert list(np.asarray(info.fail_tiles)) == [False, True, True, False,
+                                                 False]
+
+    # LT flips the boundary: a tile pinned AT the threshold fails (x < t
+    # false), a tile just below passes
+    preds = [Predicate("lt", column=0, op=OP_LT, t1=t)]
+    info = _triage_np(np.stack([tiles]), preds)
+    assert list(np.asarray(info.pass_tiles)) == [False, True, False, False,
+                                                 False]
+    assert list(np.asarray(info.fail_tiles)) == [True, False, True, False,
+                                                 True]
+
+
+def test_between_and_eq_tiles():
+    from repro.core.predicates import OP_BETWEEN, OP_EQ, Predicate
+
+    preds = [Predicate("bt", column=0, op=OP_BETWEEN, t1=1.0, t2=2.0)]
+    tiles = np.concatenate([
+        np.full(128, 1.5),                  # inside (1,2)   → pass
+        np.full(128, 0.5),                  # below          → fail
+        np.full(128, 2.0),                  # min == t2      → fail
+        np.linspace(0.5, 1.5, 128),         # straddles t1   → ambiguous
+    ])
+    info = _triage_np(np.stack([tiles]), preds)
+    assert list(np.asarray(info.pass_tiles)) == [True, False, False, False]
+    assert list(np.asarray(info.fail_tiles)) == [False, True, True, False]
+
+    # EQ (round-to-nearest equality): a constant tile at the value passes,
+    # a tile whose rounded range excludes it fails, zone maps alone leave
+    # a covering range ambiguous — and Bloom bits then prove the miss
+    preds = [Predicate("eq", column=0, op=OP_EQ, t1=7.0)]
+    tiles = np.concatenate([
+        np.full(128, 7.2),                  # rounds to 7    → pass
+        np.full(128, 9.0),                  # range excludes → fail
+        np.linspace(0.0, 20.0, 128),        # covers 7       → ambiguous
+        # range covers 7 but no value ROUNDS to 7 (even values only):
+        np.repeat([2.0, 4.0, 6.0, 8.0], 32),
+    ])
+    info = _triage_np(np.stack([tiles]), preds)
+    assert list(np.asarray(info.pass_tiles)) == [True, False, False, False]
+    assert list(np.asarray(info.fail_tiles)) == [False, True, False, False]
+    info = _triage_np(np.stack([tiles]), preds, bloom=True)
+    # Bloom turns the no-value-rounds-to-7 tile into a provable fail
+    assert list(np.asarray(info.fail_tiles)) == [False, True, False, True]
+
+
+def test_hashmix_never_provable():
+    from repro.core.predicates import OP_HASHMIX, Predicate
+
+    preds = [Predicate("mix", column=0, op=OP_HASHMIX, t1=0.5, rounds=4)]
+    tiles = np.concatenate([np.full(128, 1.0), np.zeros(128)])
+    info = _triage_np(np.stack([tiles]), preds, bloom=True)
+    assert not np.asarray(info.pass_tiles).any()
+    assert not np.asarray(info.fail_tiles).any()
+
+
+def test_cnf_group_proofs():
+    """OR-group: the group passes a tile iff ANY member provably passes,
+    fails iff EVERY member provably fails."""
+    from repro.core.predicates import OP_GT, OP_LT, Predicate
+
+    preds = [Predicate("a", column=0, op=OP_GT, t1=0.5, group="or"),
+             Predicate("b", column=1, op=OP_LT, t1=0.5, group="or")]
+    col0 = np.concatenate([
+        np.full(128, 1.0),   # a passes       → group passes
+        np.full(128, 0.0),   # a fails...
+        np.full(128, 0.0),   # a fails...
+    ])
+    col1 = np.concatenate([
+        np.full(128, 1.0),   # (b fails — irrelevant, a already passed)
+        np.full(128, 0.0),   # ...but b passes → group passes
+        np.full(128, 1.0),   # ...and b fails  → group fails
+    ])
+    info = _triage_np(np.stack([col0, col1]), preds)
+    assert list(np.asarray(info.pass_tiles)) == [True, True, False]
+    assert list(np.asarray(info.fail_tiles)) == [False, False, True]
+
+
+# ================================================= session-level invariance
+@pytest.mark.parametrize("engine", ["jnp", "pallas"])
+@pytest.mark.parametrize("compact", [False, True])
+def test_session_skip_bit_identical(engine, compact):
+    """session.step with skip_tier=zonemap: masks, survivors, monitor
+    statistics, and the ADOPTED PERMUTATION all bit-identical to off,
+    across epoch boundaries."""
+    from repro.core import FilterPlan, build_session, paper_filters_4
+
+    preds = paper_filters_4("fig1")
+    rows = 2048
+
+    def run(tier):
+        sess = build_session(FilterPlan(
+            predicates=preds, ordering=_ordering(calculate_rate=4096),
+            engine=engine, compact=compact, skip_tier=tier))
+        st = sess.init_state()
+        out = []
+        for b in range(4):
+            from repro.data.stream import gen_batch
+            cols = gen_batch(0, b, b * rows, rows, layout="clustered")
+            st, res = sess.step(st, cols)
+            # NOT work_units: decided tiles charging zero row-level work is
+            # the tier's point — the ORDERING inputs (ranks from the
+            # monitor lane) and outputs (perm) must match, not the work
+            out.append((res.mask_np.copy(), np.asarray(res.metrics.perm),
+                        np.asarray(res.metrics.adj_rank),
+                        np.asarray(res.metrics.epoch),
+                        np.asarray(res.metrics.n_pass),
+                        None if not compact else np.asarray(res.packed)))
+        return out, res
+
+    off, _ = run("off")
+    on, last = run("zonemap")
+    for a, b in zip(off, on):
+        for x, y in zip(a, b):
+            if x is not None:
+                np.testing.assert_array_equal(x, y)
+    # the tier genuinely engaged (counters surfaced through StepResult)
+    assert last.n_tiles_skipped_fail > 0
+    assert "n_tiles_skipped_fail" in last.metrics_dict()
+
+
+def test_session_skip_counters_off_are_zero():
+    from repro.core import FilterPlan, build_session, paper_filters_4
+    from repro.data.stream import gen_batch
+
+    sess = build_session(FilterPlan(predicates=paper_filters_4("fig1"),
+                                    ordering=_ordering()))
+    _, res = sess.step(sess.init_state(),
+                       gen_batch(0, 0, 0, 2048, layout="clustered"))
+    assert res.n_tiles_skipped_pass == res.n_tiles_skipped_fail \
+        == res.n_tiles_ambiguous == 0
+
+
+def test_host_stream_skip_bit_identical():
+    """numpy engine: process_stream with the tier on == off, row-exact."""
+    from repro.core import (AdaptiveFilter, AdaptiveFilterConfig,
+                            paper_filters_4)
+    from repro.data.stream import gen_batch
+
+    preds = paper_filters_4("fig1")
+    batches = [gen_batch(0, b, b * 2048, 2048, layout="clustered")
+               for b in range(3)]
+
+    def run(tier):
+        filt = AdaptiveFilter(preds, AdaptiveFilterConfig(
+            backend="numpy", ordering=_ordering(), skip_tier=tier))
+        return list(filt.process_stream(batches))
+
+    for (sa, ma, mta), (sb, mb, mtb) in zip(run("off"), run("zonemap")):
+        np.testing.assert_array_equal(ma, mb)
+        np.testing.assert_array_equal(sa, sb)
+        assert mta["perm"] == mtb["perm"]
+    assert mtb["n_tiles_skipped_fail"] > 0
+
+
+# ========================================================== plan validation
+def test_skip_tier_plan_rules():
+    from repro.core import FilterPlan, paper_filters_4
+
+    preds = paper_filters_4("fig1")
+    with pytest.raises(ValueError, match="skip_tier"):
+        FilterPlan(predicates=preds, skip_tier="zonemaps")
+    with pytest.raises(ValueError, match="shards"):
+        FilterPlan(predicates=preds, shards=2, skip_tier="zonemap")
+    with pytest.raises(ValueError, match="auto"):
+        FilterPlan(predicates=preds, engine="numpy", skip_tier="auto")
+    # fingerprint is an execution-detail-free identity: checkpoints move
+    # between tiered and untiered sessions
+    assert FilterPlan(predicates=preds, skip_tier="zonemap").fingerprint() \
+        == FilterPlan(predicates=preds).fingerprint()
+
+
+# ================================================================ auto mode
+def test_auto_falls_back_to_off_on_shuffled():
+    """Shuffled layout: every tile stays ambiguous, the structural override
+    turns the tier off (deterministic — no timing involved)."""
+    from repro.core import FilterPlan, build_session, paper_filters_4
+    from repro.data.stream import gen_batch
+
+    sess = build_session(FilterPlan(
+        predicates=paper_filters_4("fig1"),
+        ordering=_ordering(calculate_rate=100_000), skip_tier="auto"))
+    st = sess.init_state()
+    for b in range(8):                   # past the 2·warmup alternation
+        st, res = sess.step(
+            st, gen_batch(0, b, b * 2048, 2048, layout="shuffled"))
+    assert sess.skip_tier_active == "off"
+    # and the off arm genuinely runs: no tiles decided
+    assert res.n_tiles_skipped_pass == res.n_tiles_skipped_fail == 0
+
+
+def test_tuner_schedule_and_structural_override():
+    from repro.core.skip_tier import SkipTierTuner
+
+    t = SkipTierTuner("zonemap", warmup=2, probe_period=8)
+    # warmup: alternates on/off
+    arms = []
+    for _ in range(4):
+        m = t.choose()
+        arms.append(m)
+        t.observe(m, 1.0)
+    assert arms == ["zonemap", "off", "zonemap", "off"]
+
+    # tier measured faster → stays on
+    for _ in range(4):
+        t.observe("zonemap", 1.0)
+        t.observe("off", 3.0)
+    assert t.active_mode == "zonemap"
+
+    # structural override beats the clocks, and the probe never re-arms it
+    t.observe("zonemap", 1.0, ambig_frac=0.95)
+    assert t.active_mode == "off"
+    t.step_idx = t.probe_period          # a probe step
+    assert t.choose() == "off"
+
+    # ambiguity clearing re-enables the faster arm
+    t.observe("off", 3.0, ambig_frac=0.1)
+    assert t.active_mode == "zonemap"
+
+
+def test_tuner_discards_first_sample_per_arm():
+    from repro.core.skip_tier import SkipTierTuner
+
+    t = SkipTierTuner("zonemap", warmup=1)
+    t.observe("zonemap", 1000.0)         # compile-tainted → discarded
+    t.observe("off", 1000.0)
+    assert t.us_ema["zonemap"] is None and t.us_ema["off"] is None
+    t.observe("zonemap", 1.0)
+    t.observe("off", 2.0)
+    assert t.us_ema["zonemap"] == 1.0 and t.us_ema["off"] == 2.0
+
+
+def test_quantize_amb_cap():
+    from repro.core.skip_tier import AMBIG_QUANTUM_TILES, quantize_amb_cap
+
+    q = AMBIG_QUANTUM_TILES
+    # floor of one quantum even with nothing ambiguous: no zero-width
+    # gather special case, and the jit cache stays bounded
+    assert quantize_amb_cap(0, 32) == q
+    assert quantize_amb_cap(1, 32) == q
+    assert quantize_amb_cap(q, 32) == q
+    assert quantize_amb_cap(q + 1, 32) == 2 * q
+    assert quantize_amb_cap(100, 32) == 32      # capped at the batch
+
+
+# ================================================================= layouts
+def test_layouts_are_row_permutations():
+    """Every layout yields the SAME row multiset — only the order moves —
+    and gen_batch stays counter-restartable per layout."""
+    from repro.data.stream import LAYOUTS, gen_batch
+
+    base = gen_batch(0, 3, 3 * 2048, 2048)
+    for layout in LAYOUTS:
+        cols = gen_batch(0, 3, 3 * 2048, 2048, layout=layout)
+        assert cols.shape == base.shape
+        np.testing.assert_array_equal(np.sort(cols, axis=1),
+                                      np.sort(base, axis=1))
+        again = gen_batch(0, 3, 3 * 2048, 2048, layout=layout)
+        np.testing.assert_array_equal(cols, again)     # restartable
+    # iid IS the pre-layout stream, bit-identical
+    np.testing.assert_array_equal(
+        gen_batch(0, 3, 3 * 2048, 2048, layout="iid"), base)
+
+
+def test_clustered_layout_resolves_more_tiles():
+    from repro.core import paper_filters_4
+    from repro.core import skip_tier
+    from repro.core.predicates import pack
+    from repro.data.stream import gen_batch
+
+    specs = pack(paper_filters_4("fig1"))
+
+    def decided(layout):
+        info = skip_tier.triage(
+            gen_batch(0, 0, 0, 8192, layout=layout), specs, bloom=False,
+            xp=np)
+        return int(np.sum(np.asarray(info.pass_tiles))
+                   + np.sum(np.asarray(info.fail_tiles)))
+
+    assert decided("clustered") > decided("shuffled")
+    assert decided("zordered") > decided("shuffled")
+    assert decided("clustered") >= 8192 // 128 // 2   # most tiles resolve
