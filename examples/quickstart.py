@@ -13,6 +13,15 @@ from repro.core import FilterPlan, OrderingConfig, build_session, \
 from repro.data.stream import DriftConfig, gen_batch
 
 
+def build_plan() -> FilterPlan:
+    """The plan this example runs — collected by ``python -m
+    repro.analysis --chain`` so the chain is linted alongside the configs."""
+    return FilterPlan(
+        predicates=paper_filters_4("fig1"),
+        ordering=OrderingConfig(collect_rate=1000, calculate_rate=250_000,
+                                momentum=0.3))
+
+
 def main() -> None:
     preds = paper_filters_4("fig1")
     print("predicate chain (user statement order):")
@@ -21,10 +30,7 @@ def main() -> None:
 
     # the plan is the WHOLE configuration surface (engine, scope, shards,
     # compaction, exchange, tokenize all live here too — defaults shown)
-    plan = FilterPlan(
-        predicates=preds,
-        ordering=OrderingConfig(collect_rate=1000, calculate_rate=250_000,
-                                momentum=0.3))
+    plan = build_plan()
     session = build_session(plan)
     state = session.init_state()
 

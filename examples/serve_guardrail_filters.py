@@ -11,6 +11,17 @@ import sys
 from repro.launch import serve
 
 
+def build_plan():
+    """The guardrail plan the serving path compiles — collected by
+    ``python -m repro.analysis --chain`` for chain linting."""
+    from repro.core import FilterPlan, OrderingConfig
+
+    return FilterPlan(
+        predicates=serve.guardrail_chain(),
+        ordering=OrderingConfig(collect_rate=4, calculate_rate=64,
+                                momentum=0.3))
+
+
 def main() -> None:
     requests = os.environ.get("EXAMPLES_SMOKE_REQUESTS", "64")
     sys.argv = [sys.argv[0], "--arch", "gemma2-9b", "--smoke",

@@ -37,6 +37,15 @@ def run(plan: FilterPlan):
     return work, perms
 
 
+def build_plan() -> FilterPlan:
+    """The paper-faithful adaptive plan this demo runs — collected by
+    ``python -m repro.analysis --chain`` for chain linting."""
+    return FilterPlan(
+        predicates=paper_filters_4("fig1"),
+        ordering=OrderingConfig(collect_rate=500, calculate_rate=100_000,
+                                momentum=0.3))
+
+
 def main() -> None:
     preds = paper_filters_4("fig1")
     specs = pack(preds)

@@ -19,6 +19,20 @@ import sys
 from repro.launch import train
 
 
+def build_plan():
+    """A representative train-ingestion plan (CNF chain + compaction +
+    device tokenize) — collected by ``python -m repro.analysis --chain``
+    for chain linting."""
+    from repro.core import FilterPlan, OrderingConfig, TokenizeSpec
+    from repro.core.predicates import paper_filters_cnf
+
+    return FilterPlan(
+        predicates=paper_filters_cnf("fig1"),
+        ordering=OrderingConfig(collect_rate=1000, calculate_rate=250_000,
+                                momentum=0.3),
+        compact=True, tokenize=TokenizeSpec(32000))
+
+
 def main() -> None:
     steps = os.environ.get("EXAMPLES_SMOKE_STEPS", "300")
     sys.argv = [sys.argv[0], "--arch", "qwen2.5-14b", "--smoke",

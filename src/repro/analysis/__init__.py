@@ -1,0 +1,42 @@
+"""repro.analysis: static analysis over plans, compiled HLO, and source.
+
+Three passes, one ``Diagnostic`` ABI (code, severity, location, fix hint):
+
+  chain_lint     interval + domain analysis over CNF predicate chains —
+                 unsatisfiable predicates/groups/conjunctions, subsumption,
+                 always-true members, Bloom-quantizer collisions, HASHMIX
+                 shadowing; plus a canonicalizer with the fingerprint
+                 consequence spelled out. Runs automatically inside
+                 ``build_session`` (errors raise, warnings warn once).
+  hlo_audit      compiles a FilterSession and audits the jitted step /
+                 exchange / tokenize HLO: collective presence/absence per
+                 scope×exchange, host callbacks, f64 leaks, bounded trace
+                 count across ragged skip-tier widths.
+  hotpath_lint   AST ban of host-sync idioms (``.item()``, ``np.asarray``,
+                 ``int()/float()`` on traced data, ``device_get``,
+                 ``block_until_ready``, ``enable_x64``) in functions
+                 reachable from the jitted step, with a reasoned allowlist
+                 for the sanctioned syncs.
+
+CLI: ``python -m repro.analysis --all`` (exits nonzero on error-severity
+findings; ``--json`` for machine consumption, ``--strict`` to also fail
+on warnings).
+"""
+
+from repro.analysis.diagnostics import (Diagnostic, SEVERITIES, errors,
+                                        render_report, to_json, warnings_of)
+from repro.analysis.chain_lint import (CanonResult, canonicalize_chain,
+                                       lint_chain, lint_tile_proofs)
+from repro.analysis.hlo_audit import (audit_plan, audit_step_text,
+                                      collectives_in, has_f64,
+                                      host_callbacks_in)
+from repro.analysis.hotpath_lint import ALLOWLIST, lint_hotpath
+
+__all__ = [
+    "Diagnostic", "SEVERITIES", "errors", "warnings_of", "render_report",
+    "to_json",
+    "lint_chain", "canonicalize_chain", "lint_tile_proofs", "CanonResult",
+    "audit_plan", "audit_step_text", "collectives_in", "has_f64",
+    "host_callbacks_in",
+    "lint_hotpath", "ALLOWLIST",
+]

@@ -1,0 +1,172 @@
+"""CLI: ``python -m repro.analysis`` — run the static-analysis passes.
+
+    python -m repro.analysis --all             # chain + hlo + hotpath
+    python -m repro.analysis --chain --json    # machine-readable findings
+    python -m repro.analysis --hlo             # compile-audit the plan matrix
+    python -m repro.analysis --hotpath         # AST sync lint over the package
+
+Exit status: nonzero iff any error-severity finding (any finding at all
+under ``--strict``). The CI ``analysis`` job runs ``--all`` on a forced
+4-device host so the collective presence/absence checks bite.
+
+Chain targets: every shape in ``configs.paper_filters.CNF_SHAPES`` under
+the declared paper domains, plus ``build_plan()`` from every example
+script (``--examples DIR``, default ./examples when present) — examples
+that define no ``build_plan`` are skipped with a note, not an error.
+"""
+
+from __future__ import annotations
+
+import argparse
+import importlib.util
+import json
+import sys
+from pathlib import Path
+
+from repro.analysis import diagnostics as diag_lib
+from repro.analysis import chain_lint, hlo_audit, hotpath_lint
+
+
+# ------------------------------------------------------------ chain targets
+def _example_plans(examples_dir: Path):
+    """(name, FilterPlan) from every example exposing ``build_plan()``."""
+    out, skipped = [], []
+    for py in sorted(examples_dir.glob("*.py")):
+        spec = importlib.util.spec_from_file_location(
+            f"_analysis_example_{py.stem}", py)
+        mod = importlib.util.module_from_spec(spec)
+        try:
+            spec.loader.exec_module(mod)
+        except Exception as e:            # an unimportable example is its
+            skipped.append((py.name, f"import failed: {e}"))   # own problem
+            continue
+        build = getattr(mod, "build_plan", None)
+        if build is None:
+            skipped.append((py.name, "no build_plan()"))
+            continue
+        out.append((py.name, build()))
+    return out, skipped
+
+
+def run_chain_pass(examples_dir: Path | None, log) -> list:
+    from repro.configs import paper_filters
+
+    diags = []
+    domains = paper_filters.paper_domains()
+    for shape in paper_filters.CNF_SHAPES:
+        found = chain_lint.lint_chain(paper_filters.filter_chain(shape),
+                                      domains=domains)
+        log(diag_lib.render_report(found, title=f"chain: paper '{shape}'"))
+        diags += found
+    if examples_dir is not None and examples_dir.is_dir():
+        plans, skipped = _example_plans(examples_dir)
+        for name, plan in plans:
+            # no domains: example chains assign their own column meanings
+            # (the paper domains are keyed to the paper chain's columns)
+            found = chain_lint.lint_chain(plan.predicates)
+            log(diag_lib.render_report(found, title=f"chain: {name}"))
+            diags += found
+        for name, why in skipped:
+            log(f"== chain: {name}\nskipped ({why})")
+    return diags
+
+
+# -------------------------------------------------------------- hlo targets
+def _plan_matrix():
+    """Representative plans covering every audited contract."""
+    import jax
+
+    from repro.core.plan import FilterPlan, TokenizeSpec
+    from repro.core.predicates import paper_filters_4, paper_filters_cnf
+
+    preds = paper_filters_4("fig1")
+    shards = 4 if jax.device_count() >= 4 else 1
+    plans = [
+        ("per-shard", FilterPlan(predicates=preds, scope="per_shard",
+                                 shards=shards)),
+        ("eager-centralized", FilterPlan(predicates=preds,
+                                         scope="centralized",
+                                         shards=shards)),
+        ("deferred-centralized", FilterPlan(predicates=preds,
+                                            scope="centralized",
+                                            shards=shards,
+                                            exchange="deferred")),
+        ("compact-tokenize", FilterPlan(predicates=paper_filters_cnf("fig1"),
+                                        compact=True,
+                                        tokenize=TokenizeSpec(32000))),
+        ("skip-tier", FilterPlan(predicates=preds,
+                                 skip_tier="zonemap+bloom")),
+    ]
+    return plans, shards
+
+
+def run_hlo_pass(log) -> list:
+    diags = []
+    plans, shards = _plan_matrix()
+    if shards == 1:
+        log("hlo: single-device host — collective-PRESENCE checks are "
+            "vacuous here (CI forces 4 devices); absence checks still bite")
+    for name, plan in plans:
+        found = hlo_audit.audit_plan(plan)
+        log(diag_lib.render_report(found, title=f"hlo: {name}"))
+        diags += found
+    return diags
+
+
+# ------------------------------------------------------------------- driver
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="static analysis: chain linter, compiled-plan HLO "
+                    "auditor, hot-path sync lint")
+    ap.add_argument("--chain", action="store_true",
+                    help="lint the CNF chains (configs + example plans)")
+    ap.add_argument("--hlo", action="store_true",
+                    help="compile+audit the representative plan matrix")
+    ap.add_argument("--hotpath", action="store_true",
+                    help="AST host-sync lint over core/kernels/parallel")
+    ap.add_argument("--all", action="store_true", help="run all passes")
+    ap.add_argument("--json", action="store_true",
+                    help="emit findings as a JSON array on stdout")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit nonzero on warnings too")
+    ap.add_argument("--examples", type=Path, default=None,
+                    help="directory of example scripts to collect "
+                         "build_plan() chains from (default: ./examples)")
+    args = ap.parse_args(argv)
+    if not (args.chain or args.hlo or args.hotpath or args.all):
+        ap.error("pick at least one pass (--chain/--hlo/--hotpath/--all)")
+
+    lines: list[str] = []
+    log = lines.append if args.json else print
+
+    diags = []
+    if args.all or args.chain:
+        examples = args.examples
+        if examples is None:
+            cand = Path.cwd() / "examples"
+            examples = cand if cand.is_dir() else None
+        diags += run_chain_pass(examples, log)
+    if args.all or args.hlo:
+        diags += run_hlo_pass(log)
+    if args.all or args.hotpath:
+        found = hotpath_lint.lint_hotpath()
+        log(diag_lib.render_report(found, title="hotpath: src/repro"))
+        diags += found
+
+    n_err = len(diag_lib.errors(diags))
+    n_warn = len(diag_lib.warnings_of(diags))
+    if args.json:
+        print(json.dumps(diag_lib.to_json(diags), indent=2))
+    else:
+        print(f"\n{n_err} error(s), {n_warn} warning(s), "
+              f"{len(diags) - n_err - n_warn} info note(s)")
+    if n_err:
+        return 1
+    if args.strict and n_warn:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,76 @@
+"""The one Diagnostic ABI every analysis pass emits.
+
+All three passes (``chain_lint``, ``hlo_audit``, ``hotpath_lint``) return
+flat lists of ``Diagnostic`` records — code, severity, location, message,
+fix hint — so the CLI, the ``build_session`` lint hook, and the test
+harness consume one shape regardless of which pass produced a finding.
+
+Severity contract:
+
+  error    the plan/program is wrong (unsatisfiable chain, collective in a
+           collective-free module, host sync in the hot path). The CLI
+           exits nonzero; ``build_session`` raises.
+  warning  provably wasted work (subsumed / always-true predicates, Bloom
+           key collisions). The CLI prints and exits 0 (nonzero under
+           ``--strict``); ``build_session`` warns once per finding.
+  info     advisory structure notes (e.g. a HASHMIX member shadowing a
+           group's tile-fail proof). Never fatal.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+SEVERITIES = ("error", "warning", "info")
+
+
+@dataclasses.dataclass(frozen=True)
+class Diagnostic:
+    """One finding from one analysis pass.
+
+    ``code`` is a stable kebab-case identifier (``chain-unsat-group``,
+    ``hlo-step-collective``, ``hotpath-host-sync``, ...) — tests and CI
+    match on it, never on the prose. ``location`` is ``file.py:LINE`` for
+    source findings and a chain/plan coordinate (``chain[2]:int_lo``,
+    ``plan:step-hlo``) for semantic ones.
+    """
+
+    code: str
+    severity: str
+    location: str
+    message: str
+    fix_hint: str = ""
+
+    def __post_init__(self) -> None:
+        if self.severity not in SEVERITIES:
+            raise ValueError(
+                f"bad severity {self.severity!r}; pick from {SEVERITIES}")
+
+    def render(self) -> str:
+        hint = f"\n    hint: {self.fix_hint}" if self.fix_hint else ""
+        return f"[{self.severity:7s}] {self.code} @ {self.location}: " \
+               f"{self.message}{hint}"
+
+
+def errors(diags) -> list[Diagnostic]:
+    return [d for d in diags if d.severity == "error"]
+
+
+def warnings_of(diags) -> list[Diagnostic]:
+    return [d for d in diags if d.severity == "warning"]
+
+
+def render_report(diags, *, title: str | None = None) -> str:
+    """Human-readable report, errors first, stable within severity."""
+    order = {s: i for i, s in enumerate(SEVERITIES)}
+    lines = [] if title is None else [f"== {title}"]
+    for d in sorted(diags, key=lambda d: (order[d.severity], d.location,
+                                          d.code)):
+        lines.append(d.render())
+    if not diags:
+        lines.append("clean (no findings)")
+    return "\n".join(lines)
+
+
+def to_json(diags) -> list[dict]:
+    return [dataclasses.asdict(d) for d in diags]

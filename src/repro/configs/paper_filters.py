@@ -44,3 +44,13 @@ def filter_chain(shape: str = "flat"):
 
 
 CNF_SHAPES = ("flat", "cnf", "wide")
+
+#: Declared per-column value domains of the paper stream, for the chain
+#: linter's always-true analysis (``repro.analysis.chain_lint.lint_chain``).
+#: Columns 0 (date) and 1 (int) are normally distributed — unbounded, so
+#: they declare nothing; column 2 is the string-hash lane, folded into
+#: [0, MIX_MOD) by the hashmix modulo (``core.predicates.MIX_MOD``).
+def paper_domains() -> dict[int, tuple[float, float]]:
+    from repro.core.predicates import MIX_MOD
+
+    return {2: (0.0, MIX_MOD)}

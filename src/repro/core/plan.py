@@ -104,68 +104,97 @@ def validate_combo(*, scope: str, cost_mode: str, backend: str,
 
     ``AdaptiveFilterConfig``, ``ShardedAdaptiveFilter``, the pipelines, and
     ``FilterPlan`` all funnel through here, so the rules cannot drift.
+
+    Every violated rule is reported — ONE aggregated ``ValueError`` listing
+    all of them, each enumerating the valid choices for its field — so a
+    plan with three bad fields costs one round trip, not three. Rules that
+    depend on a field that already failed (e.g. engine-capability checks
+    when the backend name is unknown) are skipped rather than reported as
+    spurious extra failures.
     """
-    scope_from_str(scope)
+    problems: list[str] = []
+    try:
+        scope_from_str(scope)
+        scope_ok = True
+    except ValueError as e:
+        problems.append(str(e))
+        scope_ok = False
     if cost_mode not in ("static", "measured"):
-        raise ValueError(f"bad cost_mode {cost_mode}")
-    if backend not in engine_lib.available_engines():
-        raise ValueError(
-            f"bad backend {backend}; registered engines: "
-            f"{engine_lib.available_engines()}")
+        problems.append(f"bad cost_mode {cost_mode}; pick from "
+                        "('static', 'measured')")
+    backend_ok = backend in engine_lib.available_engines()
+    if not backend_ok:
+        problems.append(f"bad backend {backend}; registered engines: "
+                        f"{engine_lib.available_engines()}")
     if cost_mode == "measured" and backend != "numpy":
-        raise ValueError("measured cost mode needs the host (numpy) backend")
+        problems.append(
+            "measured cost mode needs the host (numpy) backend; "
+            f"cost_mode='static' works on every engine, got {backend!r}")
     if shards < 1:
-        raise ValueError(f"shards must be >= 1, got {shards}")
-    if shards > 1 and not get_engine(backend).traceable:
-        raise ValueError(
+        problems.append(f"shards must be >= 1, got {shards}")
+    traceable = backend_ok and get_engine(backend).traceable
+    if backend_ok and shards > 1 and not traceable:
+        problems.append(
             f"backend {backend!r} is a host engine; the sharded "
             "filter needs a traceable engine (jnp / pallas)")
-    if compact_output and not get_engine(backend).traceable:
-        raise ValueError(
+    if backend_ok and compact_output and not traceable:
+        problems.append(
             "compact_output is the device-side gather; the host "
             f"engine {backend!r} already emits compacted rows "
             "(boolean-index short-circuit) — drop the flag")
     if compact_capacity is not None:
         if not compact_output:
-            raise ValueError("compact_capacity needs compact_output=True")
+            problems.append("compact_capacity needs compact_output=True")
         if isinstance(compact_capacity, str):
             if compact_capacity != "auto":
-                raise ValueError(
+                problems.append(
                     f"compact_capacity {compact_capacity!r}: pass "
                     "an int, None (batch width), or 'auto'")
         elif compact_capacity < 1:
-            raise ValueError("compact_capacity must be >= 1")
+            problems.append(
+                f"compact_capacity must be >= 1, got {compact_capacity!r} "
+                "(or None for batch width, or 'auto')")
     if compact_slack < 1.0:
-        raise ValueError("compact_slack must be >= 1.0 (headroom factor)")
+        problems.append(f"compact_slack must be >= 1.0 (headroom factor), "
+                        f"got {compact_slack!r}")
     if exchange not in EXCHANGE_MODES:
-        raise ValueError(
+        problems.append(
             f"bad exchange {exchange!r}; pick from {EXCHANGE_MODES}")
-    if exchange != "eager" and scope != "centralized":
-        raise ValueError(
+    elif exchange != "eager" and scope_ok and scope != "centralized":
+        problems.append(
             "deferred exchange only changes the CENTRALIZED scope's "
             f"collective cadence; scope {scope!r} never exchanges "
             "— drop the flag")
     if device_tokenize and not compact_output:
-        raise ValueError("device_tokenize consumes the padded compacted "
-                         "buffers — it needs compact_output=True")
+        problems.append("device_tokenize consumes the padded compacted "
+                        "buffers — it needs compact_output=True")
     if skip_tier not in SKIP_TIER_MODES:
-        raise ValueError(
+        problems.append(
             f"bad skip_tier {skip_tier!r}; pick from {SKIP_TIER_MODES}")
-    if skip_tier != "off":
+    elif skip_tier != "off":
         if shards > 1:
-            raise ValueError(
+            problems.append(
                 "skip_tier needs shards == 1: the jnp skip path sizes its "
                 "ambiguous-tile gather from a per-step host sync, which "
                 "cannot drive static shapes under shard_map — run the "
                 "tier per-executor or drop it")
-        if not getattr(get_engine(backend), "supports_skip", False):
-            raise ValueError(
-                f"backend {backend!r} does not implement the skip tier")
-        if skip_tier == "auto" and not get_engine(backend).traceable:
-            raise ValueError(
+        if backend_ok and not getattr(get_engine(backend), "supports_skip",
+                                      False):
+            problems.append(
+                f"backend {backend!r} does not implement the skip tier; "
+                "pick an engine with tile-statistics support (jnp / "
+                "pallas / numpy) or skip_tier='off'")
+        if backend_ok and skip_tier == "auto" and not traceable:
+            problems.append(
                 "skip_tier='auto' is driven by the session's online "
                 "us_per_row tuner, which needs a traceable engine — pick "
                 "'zonemap'/'zonemap+bloom' explicitly for host engines")
+    if problems:
+        if len(problems) == 1:
+            raise ValueError(problems[0])
+        raise ValueError(
+            f"{len(problems)} invalid plan field combinations:\n  - "
+            + "\n  - ".join(problems))
 
 
 # ----------------------------------------------------------------- the plan

@@ -375,22 +375,8 @@ class FilterSession:
         else:
             state, mask, metrics = f.jit_step(state, cols)
         if auto:
-            # honest wall-clock per arm: the tuner compares ARMS, so both
-            # pay the same sync; ambiguous fraction comes along for the
-            # structural shutoff on adversarial (shuffled) layouts
-            import jax
-            jax.block_until_ready(mask)
-            dt = time.perf_counter() - t0
-            ambig_frac = None
-            if skip_mode != "off":
-                n_amb = float(np.sum(np.asarray(metrics.n_tiles_ambiguous)))
-                n_tot = n_amb \
-                    + float(np.sum(np.asarray(metrics.n_tiles_pass))) \
-                    + float(np.sum(np.asarray(metrics.n_tiles_fail)))
-                ambig_frac = n_amb / max(n_tot, 1.0)
-            self._skip_tuner.observe(
-                skip_mode, dt * 1e6 / max(int(cols.shape[1]), 1),
-                ambig_frac)
+            self._observe_skip_arm(skip_mode, mask, metrics, t0,
+                                   int(cols.shape[1]))
         if self._core.exchange_deferred:
             # host-counted boundary: no per-step device sync (the jitted
             # exchange itself checks/derives everything it needs). One
@@ -404,8 +390,7 @@ class FilterSession:
                     state = f.maybe_exchange(state)
                     self._rows_local %= self.plan.ordering.calculate_rate
                 else:
-                    self._rows_local = int(np.max(
-                        np.asarray(state.rows_into_epoch)))
+                    self._rows_local = self._sync_rows_into_epoch(state)
         f.observe_for_capacity(prev, state, n_local)
         # a deferred exchange may have just fired the epoch boundary — the
         # metrics must report the post-exchange epoch (one uniform answer)
@@ -415,6 +400,42 @@ class FilterSession:
         # hot step free of forced device round-trips
         return state, StepResult(mask, packed, n_kept, tokens, n_tokens,
                                  metrics, cap, warn_cell=[])
+
+    # ------------------------------------------------- sanctioned host syncs
+    # These two helpers are the session driver's ONLY deliberate
+    # device→host syncs outside the skip-tier/boundary counters owned by
+    # AdaptiveFilter; each is allowlisted by qualname (with its reason) in
+    # ``repro.analysis.hotpath_lint.ALLOWLIST`` — a new sync anywhere else
+    # in the reachable step graph fails the hot-path lint.
+    def _observe_skip_arm(self, skip_mode: str, mask, metrics,
+                          t0: float, n_rows: int) -> None:
+        """Feed the skip_tier="auto" tuner one honest per-arm wall clock.
+
+        The tuner compares ARMS, so both pay the same block_until_ready
+        sync; the ambiguous-tile fraction rides along for the structural
+        shutoff on adversarial (shuffled) layouts.
+        """
+        import time
+
+        import jax
+
+        jax.block_until_ready(mask)
+        dt = time.perf_counter() - t0
+        ambig_frac = None
+        if skip_mode != "off":
+            n_amb = float(np.sum(np.asarray(metrics.n_tiles_ambiguous)))
+            n_tot = n_amb \
+                + float(np.sum(np.asarray(metrics.n_tiles_pass))) \
+                + float(np.sum(np.asarray(metrics.n_tiles_fail)))
+            ambig_frac = n_amb / max(n_tot, 1.0)
+        self._skip_tuner.observe(skip_mode, dt * 1e6 / max(n_rows, 1),
+                                 ambig_frac)
+
+    def _sync_rows_into_epoch(self, state: OrderState) -> int:
+        """Re-anchor the host boundary counter from the device state — one
+        sync per presumed boundary, only when the counter drifted (states
+        advanced outside this session)."""
+        return int(np.max(np.asarray(state.rows_into_epoch)))
 
     def _tokenize_sharded(self, packed, counts):
         """Per-shard device tokenize+pack under shard_map.
@@ -559,6 +580,36 @@ class FilterSession:
         return restored
 
 
+#: chain-lint findings already warned about this process (warn once per
+#: (code, location) — plans are rebuilt constantly in benches/tests)
+_LINT_WARNED: set[tuple[str, str]] = set()
+
+
+def _lint_plan_chain(plan: FilterPlan) -> None:
+    """Plan-compile-time chain lint (the Liu & Ives point: canonicalize
+    BEFORE adaptive re-optimization). Error findings — unsatisfiable
+    predicates/groups/conjunctions — raise; redundancy findings warn once;
+    info notes stay silent (the CLI surfaces them)."""
+    import warnings
+
+    from repro.analysis import chain_lint, diagnostics
+
+    diags = chain_lint.lint_chain(plan.predicates)
+    errs = diagnostics.errors(diags)
+    if errs:
+        raise ValueError(
+            "FilterPlan chain fails the semantics lint:\n"
+            + diagnostics.render_report(errs)
+            + "\n(run `python -m repro.analysis --chain` for the full "
+            "report)")
+    for d in diagnostics.warnings_of(diags):
+        key = (d.code, d.location)
+        if key not in _LINT_WARNED:
+            _LINT_WARNED.add(key)
+            warnings.warn(f"repro chain lint: {d.render()}", UserWarning,
+                          stacklevel=3)
+
+
 def build_session(plan: FilterPlan, mesh=None) -> FilterSession:
     """Compile a declarative ``FilterPlan`` into a ``FilterSession``.
 
@@ -566,7 +617,15 @@ def build_session(plan: FilterPlan, mesh=None) -> FilterSession:
     (default when ``plan.shards > 1``: a fresh 1-axis mesh over
     ``plan.shards`` devices). Passing a mesh forces the shard_mapped
     execution layer even for ``shards=1``.
+
+    Runs the chain semantics linter (``repro.analysis.chain_lint``) before
+    compiling: a provably-unsatisfiable chain raises here — at plan time,
+    with the predicate named — instead of silently cutting every row;
+    provably-redundant predicates warn once per process. (The legacy
+    ``FilterSession.from_filter`` path skips the lint: it adopts an
+    already-validated filter.)
     """
+    _lint_plan_chain(plan)
     return FilterSession(plan, mesh=mesh)
 
 

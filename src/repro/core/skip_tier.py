@@ -55,6 +55,25 @@ AMBIG_QUANTUM_TILES = 16
 SKIP_TIER_MODES = ("off", "zonemap", "zonemap+bloom", "auto")
 
 
+def eq_round(t1: float) -> float:
+    """The EQ threshold key: round() in f32, exactly as the packed specs
+    and the row-level ``jnp.round(x) == jnp.round(t1)`` see it.
+
+    Single-sourced here so the tile resolver and the chain linter
+    (``repro.analysis.chain_lint``) cannot disagree on quantization —
+    ``Predicate.t1`` is a python float64 but every engine compares against
+    its float32 packing, so any analysis that reasons from the f64 value
+    can prove facts the runtime will contradict.
+    """
+    return float(np.round(np.float32(t1)))
+
+
+def bloom_key(t1: float) -> int:
+    """Bloom bit index of an EQ threshold: round32(t1) mod BLOOM_BITS —
+    the same fold ``bloom_bitmap`` applies to the data side."""
+    return int(np.mod(eq_round(t1), float(BLOOM_BITS)))
+
+
 def host_pred_rows(specs) -> list[tuple[int, int, float, float]]:
     """Static per-predicate (column, op, t1, t2) rows read host-side.
 
@@ -143,14 +162,12 @@ def resolve_tiles(mins, maxs, bloom, specs, *, xp) -> tuple:
             ap = (mn > t1) & (mx < t2)
             af = (mx <= t1) | (mn >= t2)
         elif op == pred_lib.OP_EQ:
-            r1 = float(np.round(np.float32(t1)))
+            r1 = eq_round(t1)
             rmn, rmx = xp.round(mn), xp.round(mx)
             ap = (rmn == r1) & (rmx == r1)
             af = (rmn > r1) | (rmx < r1)
             if bloom is not None:
-                key = int(np.mod(np.round(np.float32(t1)),
-                                 float(BLOOM_BITS)))
-                af = af | ~bloom[col, :, key]
+                af = af | ~bloom[col, :, bloom_key(t1)]
         else:                                   # OP_HASHMIX: never provable
             ap = xp.zeros((n_tiles,), bool)
             af = xp.zeros((n_tiles,), bool)

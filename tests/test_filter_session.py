@@ -37,6 +37,32 @@ def _ordering(**kw):
 
 
 # ================================================================ validation
+def test_plan_aggregates_all_violations():
+    """A plan with several bad fields reports every one in a single
+    ValueError (one round trip), each enumerating its valid choices."""
+    from repro.core import FilterPlan, paper_filters_4
+
+    with pytest.raises(ValueError) as ei:
+        FilterPlan(predicates=paper_filters_4("fig1"), cost_mode="guess",
+                   exchange="sometimes", slack=0.5)
+    msg = str(ei.value)
+    assert "invalid plan field combinations" in msg
+    assert "bad cost_mode" in msg and "'static', 'measured'" in msg
+    assert "bad exchange" in msg and "compact_slack" in msg
+
+
+def test_tokenize_plan_audits_clean():
+    """The u32-limb contract (zero f64 ops in step + tokenizer modules, no
+    host callbacks, collective-free step) pinned through the shared HLO
+    auditor — the same pass the CI ``analysis`` job runs."""
+    from repro.analysis import audit_plan
+    from repro.core import FilterPlan, TokenizeSpec, paper_filters_4
+
+    plan = FilterPlan(predicates=paper_filters_4("fig1"), compact=True,
+                      tokenize=TokenizeSpec(32000), ordering=_ordering())
+    assert audit_plan(plan) == []
+
+
 def test_plan_validates_whole_matrix():
     """FilterPlan is the single source of truth for valid combinations —
     same messages the legacy config surfaces raise (they delegate here)."""

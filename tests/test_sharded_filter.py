@@ -215,16 +215,37 @@ def test_per_shard_diverges_centralized_converges():
 @pytest.mark.slow
 def test_per_shard_hlo_has_no_collectives():
     """PER_SHARD ⇒ zero network traffic, machine-checked on the compiled
-    HLO; CENTRALIZED must show the stat all-reduce."""
-    out = run_py(_HETERO_PRELUDE + textwrap.dedent("""
-        for scope, want in (("per_shard", False), ("per_batch", False),
-                            ("centralized", True)):
-            sf = ShardedAdaptiveFilter(preds, AdaptiveFilterConfig(
-                scope=scope, ordering=ordering))
-            txt = sf.compiled_text(sf.init_state(), cols)
-            has = any(k in txt for k in ("all-reduce", "all-gather",
-                                         "reduce-scatter"))
-            assert has == want, (scope, has)
+    HLO; CENTRALIZED must show the stat all-reduce. Pinned through the
+    shared auditor (``repro.analysis.hlo_audit``): the plan's scope tells
+    the auditor whether collectives must be absent or present, so this
+    test and the CI ``analysis`` job enforce the identical contract."""
+    out = run_py(textwrap.dedent("""
+        from repro.analysis import audit_plan, audit_step_text, errors
+        from repro.core import (FilterPlan, OrderingConfig, build_session,
+                                paper_filters_4)
+
+        ordering = OrderingConfig(collect_rate=10, calculate_rate=2000)
+        for scope in ("per_shard", "per_batch", "centralized"):
+            plan = FilterPlan(predicates=paper_filters_4("fig1"),
+                              scope=scope, shards=4, ordering=ordering)
+            diags = audit_plan(plan)
+            assert not errors(diags), (scope, [d.render() for d in diags])
+        # cross-audit proves the checks bite: the eager CENTRALIZED step
+        # (which legitimately carries the all-reduce) must FAIL the
+        # PER_SHARD collective-free contract
+        import jax.numpy as jnp
+        import numpy as np
+        cent = FilterPlan(predicates=paper_filters_4("fig1"),
+                          scope="centralized", shards=4, ordering=ordering)
+        session = build_session(cent)
+        cols = jnp.asarray(np.random.default_rng(0).uniform(
+            -64, 64, (4, 4096 * 4)).astype(np.float32))
+        txt = session.compiled_step_text(session.init_state(), cols)
+        per_shard = FilterPlan(predicates=paper_filters_4("fig1"),
+                               scope="per_shard", shards=4,
+                               ordering=ordering)
+        found = audit_step_text(txt, per_shard, num_shards=4)
+        assert [d.code for d in found] == ["hlo-step-collective"], found
         print("HLO-OK")
     """))
     assert "HLO-OK" in out

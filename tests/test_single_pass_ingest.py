@@ -149,29 +149,37 @@ def test_exchange_config_validation():
 def test_deferred_per_step_hlo_has_no_collectives():
     """The point of deferral: the per-STEP compiled module is collective-
     free (indistinguishable from PER_SHARD on the wire); the one all-reduce
-    lives in the boundary exchange module."""
+    lives in the boundary exchange module. Pinned through the shared HLO
+    auditor (``repro.analysis.hlo_audit``) so this test and the CI
+    ``analysis`` job enforce the identical contract."""
     out = run_py("""
-        import jax, jax.numpy as jnp, numpy as np
-        from repro.core import (AdaptiveFilterConfig, OrderingConfig,
-                                ShardedAdaptiveFilter, paper_filters_4)
-        from repro.data.stream import gen_batch
+        from repro.analysis import audit_plan, collectives_in, errors
+        from repro.core import FilterPlan, OrderingConfig, paper_filters_4
 
         ordering = OrderingConfig(collect_rate=10, calculate_rate=2000)
+        for exchange in ("eager", "deferred", "deferred-async"):
+            plan = FilterPlan(predicates=paper_filters_4("fig1"),
+                              scope="centralized", shards=4,
+                              exchange=exchange, ordering=ordering)
+            diags = audit_plan(plan)
+            assert not errors(diags), [d.render() for d in diags]
+        # and the auditor is not vacuous: an eager CENTRALIZED step audited
+        # as if it were deferred must flag the in-step collective
+        from repro.analysis import audit_step_text
+        from repro.core import build_session
+        plan = FilterPlan(predicates=paper_filters_4("fig1"),
+                          scope="centralized", shards=4, ordering=ordering)
+        session = build_session(plan)
+        import jax.numpy as jnp
+        from repro.data.stream import gen_batch
         cols = jnp.asarray(gen_batch(0, 0, 0, 4096 * 4))
-        COLL = ("all-reduce", "all-gather", "reduce-scatter",
-                "collective-permute")
-
-        for exchange, step_has in (("eager", True), ("deferred", False),
-                                   ("deferred-async", False)):
-            sf = ShardedAdaptiveFilter(paper_filters_4("fig1"),
-                AdaptiveFilterConfig(scope="centralized", exchange=exchange,
-                                     ordering=ordering))
-            txt = sf.compiled_text(sf.init_state(), cols)
-            has = any(k in txt for k in COLL)
-            assert has == step_has, (exchange, has)
-            if exchange != "eager":
-                xtxt = sf.compiled_exchange_text(sf.init_state())
-                assert any(k in xtxt for k in COLL), exchange
+        txt = session.compiled_step_text(session.init_state(), cols)
+        assert collectives_in(txt)
+        deferred = FilterPlan(predicates=paper_filters_4("fig1"),
+                              scope="centralized", shards=4,
+                              exchange="deferred", ordering=ordering)
+        found = audit_step_text(txt, deferred, num_shards=4)
+        assert [d.code for d in found] == ["hlo-step-collective"], found
         print("DEFERRED-HLO-OK")
     """)
     assert "DEFERRED-HLO-OK" in out
