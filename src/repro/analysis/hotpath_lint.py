@@ -86,6 +86,10 @@ ALLOWLIST: dict[str, str] = {
     "FilterSession._sync_rows_into_epoch":
         "deferred-boundary self-heal: one sync per presumed boundary "
         "when the host row counter drifted (states advanced elsewhere)",
+    "FilterSession.validate_state":
+        "THE guarded-runtime integrity probe: every state invariant "
+        "fused into one jitted boolean — one sync per validation "
+        "boundary (never per step), driven by runtime.guard",
     "host_pred_rows":
         "trace-time constant: np.asarray reads the closed-over static "
         "PredicateSpecs tuple, never a traced array",

@@ -23,13 +23,17 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import logging
 import os
 import pathlib
 import shutil
 import threading
+import zlib
 
 import jax
 import numpy as np
+
+log = logging.getLogger(__name__)
 
 
 def _flatten(tree, prefix=""):
@@ -92,6 +96,12 @@ def save_checkpoint(directory, step: int, tree, *, extra: dict | None = None,
         "keys": sorted(arrays),
         "shapes": {k: list(v.shape) for k, v in arrays.items()},
         "dtypes": dtypes,
+        # per-array crc32 of the ENCODED bytes (the bit-view trick means
+        # the stored representation is what storage can rot): a restore
+        # verifies these before deserializing, and the newest-valid
+        # fallback in load_checkpoint skips steps that fail
+        "crc32": {k: zlib.crc32(
+            np.ascontiguousarray(v).tobytes()) for k, v in encoded.items()},
         "extra": extra or {},
     }
     (tmp / "manifest.json").write_text(json.dumps(manifest))
@@ -112,28 +122,75 @@ def latest_step(directory) -> int | None:
     return max(steps) if steps else None
 
 
-def load_checkpoint(directory, template, *, step: int | None = None,
-                    shardings=None, process_id: int = 0):
-    """Restore into the structure of ``template``; optionally re-shard onto
-    ``shardings`` (same pytree structure) — the elastic-rescale path."""
-    directory = pathlib.Path(directory)
-    if step is None:
-        step = latest_step(directory)
-        if step is None:
-            raise FileNotFoundError(f"no committed checkpoint in {directory}")
-    path = directory / f"step_{step:010d}"
+def _committed_steps(directory: pathlib.Path) -> list[int]:
+    if not directory.exists():
+        return []
+    return sorted(int(p.name.split("_")[1]) for p in directory.iterdir()
+                  if p.is_dir() and p.name.startswith("step_")
+                  and not p.name.endswith(".tmp")
+                  and (p / "manifest.json").exists())
+
+
+def _load_one(path: pathlib.Path, template, process_id: int):
     manifest = json.loads((path / "manifest.json").read_text())
     with np.load(path / f"shard_{process_id}.npz") as z:
         flat = {k.replace("\x1f", "/"): z[k] for k in z.files}
+    crcs = manifest.get("crc32", {})
+    for k, want in crcs.items():
+        if k not in flat:
+            raise ValueError(f"corrupt checkpoint {path.name}: array {k!r} "
+                             "listed in the manifest is missing")
+        got = zlib.crc32(np.ascontiguousarray(flat[k]).tobytes())
+        if got != int(want):
+            raise ValueError(
+                f"corrupt checkpoint {path.name}: crc32 mismatch on {k!r} "
+                f"(stored {int(want):#010x}, computed {got:#010x}) — the "
+                "blob was truncated or bit-flipped in storage")
     for k, want in manifest["dtypes"].items():
         if k in flat and str(flat[k].dtype) != want:
             import ml_dtypes
             flat[k] = flat[k].view(np.dtype(getattr(ml_dtypes, want, want)))
-    tree = _unflatten_like(template, flat)
-    if shardings is not None:
-        tree = jax.tree.map(
-            lambda x, s: jax.device_put(x, s), tree, shardings)
-    return tree, manifest["extra"], step
+    return _unflatten_like(template, flat), manifest["extra"]
+
+
+def load_checkpoint(directory, template, *, step: int | None = None,
+                    shardings=None, process_id: int = 0):
+    """Restore into the structure of ``template``; optionally re-shard onto
+    ``shardings`` (same pytree structure) — the elastic-rescale path.
+
+    Integrity: every array's crc32 (recorded in the manifest since the
+    guarded-runtime schema) is verified before deserializing. With
+    ``step=None`` the restore walks committed steps NEWEST-FIRST and falls
+    back past corrupted/truncated ones (each skip logged), raising only
+    when no step loads cleanly; an explicit ``step`` fails hard instead.
+    Pre-crc manifests (no ``crc32`` field) load unverified.
+    """
+    directory = pathlib.Path(directory)
+    if step is not None:
+        candidates = [step]
+    else:
+        candidates = list(reversed(_committed_steps(directory)))
+        if not candidates:
+            raise FileNotFoundError(f"no committed checkpoint in {directory}")
+    last_err: Exception | None = None
+    for s in candidates:
+        path = directory / f"step_{s:010d}"
+        try:
+            tree, extra = _load_one(path, template, process_id)
+        except (ValueError, OSError, KeyError) as e:
+            if step is not None:
+                raise
+            log.warning("checkpoint %s is corrupt (%s); falling back to "
+                        "the previous committed step", path.name, e)
+            last_err = e
+            continue
+        if shardings is not None:
+            tree = jax.tree.map(
+                lambda x, sh: jax.device_put(x, sh), tree, shardings)
+        return tree, extra, s
+    raise ValueError(
+        f"every committed checkpoint in {directory} failed integrity "
+        f"verification; newest error: {last_err}")
 
 
 @dataclasses.dataclass

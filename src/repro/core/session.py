@@ -36,6 +36,8 @@ every pre-session checkpoint holds) still load.
 from __future__ import annotations
 
 import logging
+import warnings
+import zlib
 from typing import Any, NamedTuple
 
 import numpy as np
@@ -72,6 +74,11 @@ class StepResult(NamedTuple):
     # per-result once-cell for the overflow warning (fresh list per step;
     # None disables — e.g. hand-built results)
     warn_cell: list | None = None
+    # True when the guarded runtime refused this batch (poisoned data):
+    # the mask is all-False, the metrics are zeros, and the state did NOT
+    # advance — downstream consumers skip the batch instead of folding
+    # garbage into the stream (see repro.runtime.guard.GuardedSession)
+    quarantined: bool = False
 
     # ------------------------------------------------------- host accessors
     @property
@@ -186,10 +193,79 @@ class StepResult(NamedTuple):
             "n_tiles_skipped_pass": self.n_tiles_skipped_pass,
             "n_tiles_skipped_fail": self.n_tiles_skipped_fail,
             "n_tiles_ambiguous": self.n_tiles_ambiguous,
+            "quarantined": bool(self.quarantined),
         }
         if nd.ndim >= 1:
             out["n_dropped_per_shard"] = [int(x) for x in nd]
         return out
+
+
+# ============================================================ state validation
+def state_invariants(state: OrderState, *, n_predicates: int, n_groups: int,
+                     collect_rate: int, calculate_rate: int,
+                     rows_bounded: bool = True, xp=None):
+    """ONE fused boolean over every structural invariant of an OrderState.
+
+    Works on single ``[P]``-shaped states and stacked ``[S, P]`` sharded
+    states alike (every check broadcasts over a leading shard axis):
+
+      * all stat accumulators and ``adj_rank`` finite; accumulators and
+        counters non-negative (a NaN/Inf here poisons every future rank);
+      * ``num_cut``/``group_cut`` never exceed ``n_monitored`` (a count
+        above the monitored total cannot arise from any real batch);
+      * ``perm`` is a permutation of [0, P) and ``group_perm`` of [0, G)
+        (a clamped out-of-bounds gather silently evaluates the wrong
+        predicate — the worst kind of corruption: no crash, wrong masks);
+      * ``rows_into_epoch`` >= 0 and — when the session owns its epoch
+        boundaries (``rows_bounded``) — below ``calculate_rate``;
+        ``sample_phase`` in [0, collect_rate); ``epoch`` >= 0.
+
+    Returns a scalar bool ARRAY (no host sync): callers jit this and
+    choose where to pay the one transfer (``FilterSession.validate_state``).
+    """
+    if xp is None:
+        import jax.numpy as xp
+
+    st = state.stats
+
+    def clean(a):      # finite AND non-negative
+        return xp.all(xp.isfinite(a)) & xp.all(a >= 0)
+
+    ok = clean(st.num_cut) & clean(st.cost_acc) & clean(st.n_monitored)
+    ok &= xp.all(xp.isfinite(state.adj_rank))
+    n_mon = st.n_monitored[..., None]        # broadcast over [.., P]
+    ok &= xp.all(st.num_cut <= n_mon)
+    if st.group_cut is not None:
+        ok &= clean(st.group_cut) & xp.all(st.group_cut <= n_mon)
+    ok &= xp.all(xp.sort(state.perm.astype(xp.int32), axis=-1)
+                 == xp.arange(n_predicates, dtype=xp.int32))
+    if state.group_perm is not None:
+        ok &= xp.all(xp.sort(state.group_perm.astype(xp.int32), axis=-1)
+                     == xp.arange(n_groups, dtype=xp.int32))
+    ok &= xp.all(state.rows_into_epoch >= 0)
+    if rows_bounded:
+        ok &= xp.all(state.rows_into_epoch < calculate_rate)
+    ok &= xp.all((state.sample_phase >= 0)
+                 & (state.sample_phase < collect_rate))
+    ok &= xp.all(state.epoch >= 0)
+    return ok
+
+
+# ======================================================== checkpoint integrity
+def arrays_crc32(arrays: dict) -> int:
+    """CRC32 over a state-arrays dict (key order canonicalized).
+
+    Folds each array's name, dtype, shape, and raw bytes into one running
+    checksum. Computed on the HOST numpy views, after any serialization
+    round trip — the TrainDriver's JSON ``tolist``/``asarray(dtype)``
+    round trip is value- and dtype-exact, so the checksum survives it.
+    """
+    crc = 0
+    for k in sorted(arrays):
+        v = np.ascontiguousarray(np.asarray(arrays[k]))
+        crc = zlib.crc32(f"{k}|{v.dtype.str}|{v.shape}".encode(), crc)
+        crc = zlib.crc32(v.tobytes(), crc)
+    return crc
 
 
 # ================================================================== session
@@ -239,6 +315,8 @@ class FilterSession:
         self._jit_tokenize = None   # sharded per-shard tokenize (lazy)
         # skip_tier="auto": the online us_per_row tuner (lazy; host-owned)
         self._skip_tuner = None
+        # guarded-runtime integrity probe (lazy jit of state_invariants)
+        self._jit_validate = None
         # host-side mirror of rows_into_epoch for the deferred-exchange
         # boundary check: rows per shard are deterministic (every step adds
         # the static local batch width), so the due-test needs NO
@@ -468,6 +546,37 @@ class FilterSession:
                 out_specs=(P(a), P(a))))
         return self._jit_tokenize(packed, counts)
 
+    # ----------------------------------------------------------- validation
+    def validate_state(self, state: OrderState) -> bool:
+        """On-device structural integrity check of an ``OrderState``.
+
+        Every invariant — finite, non-negative accumulators; counts within
+        ``n_monitored``; ``perm``/``group_perm`` true permutations;
+        epoch/rows/phase counters in range — is fused into ONE jitted
+        boolean, so the whole probe costs a single device→host sync. The
+        guarded runtime (``repro.runtime.guard``) calls this once per
+        validation boundary, never per step; the qualname is allowlisted in
+        ``hotpath_lint`` with that contract.
+        """
+        if self._jit_validate is None:
+            import jax
+
+            cfg = self.plan.ordering
+            n_p = len(self.plan.predicates)
+            n_g = self._core.specs.n_groups
+            # deferred exchange legitimately lets rows_into_epoch overshoot
+            # calculate_rate until the driver fires the boundary
+            bounded = not self._core.exchange_deferred
+
+            def check(s):
+                return state_invariants(
+                    s, n_predicates=n_p, n_groups=n_g,
+                    collect_rate=cfg.collect_rate,
+                    calculate_rate=cfg.calculate_rate, rows_bounded=bounded)
+
+            self._jit_validate = jax.jit(check)
+        return bool(np.asarray(self._jit_validate(state)))
+
     # ------------------------------------------------------------ analysis
     def compiled_step_text(self, state: OrderState, batch) -> str:
         """Compiled HLO of one step (collective-freedom assertions)."""
@@ -504,6 +613,7 @@ class FilterSession:
         (replicated vs partitioned — see ``_stats_replicated``), so a
         restore can verify compatibility and reshard elastically."""
         from repro.data.pipeline import fstate_to_arrays
+        arrays = fstate_to_arrays(state)
         return {
             "format": CKPT_FORMAT,
             "version": CKPT_VERSION,
@@ -511,7 +621,8 @@ class FilterSession:
             "shards": self.num_shards if self.sharded else 0,
             "stats_layout": "replicated" if self._stats_replicated
             else "partitioned",
-            "arrays": fstate_to_arrays(state),
+            "crc32": arrays_crc32(arrays),
+            "arrays": arrays,
         }
 
     def restore_state(self, blob: dict) -> OrderState:
@@ -552,6 +663,21 @@ class FilterSession:
             if "stats_layout" in blob:
                 src_replicated = blob["stats_layout"] == "replicated"
             arrays = blob["arrays"]
+            stored_crc = blob.get("crc32")
+            if stored_crc is None:
+                warnings.warn(
+                    "repro: loading a checksum-less v2 filter-session "
+                    "checkpoint (written before the crc32 integrity field); "
+                    "corruption cannot be detected — re-save to upgrade",
+                    UserWarning, stacklevel=2)
+            else:
+                got_crc = arrays_crc32(arrays)
+                if got_crc != int(stored_crc):
+                    raise ValueError(
+                        f"corrupt checkpoint: crc32 mismatch (stored "
+                        f"{int(stored_crc):#010x}, computed {got_crc:#010x})"
+                        " — the blob was truncated or bit-flipped in "
+                        "storage; refusing to deserialize garbage state")
         else:                                    # v1: raw fstate_to_arrays
             arrays = blob
         arrays = {k: np.asarray(v) for k, v in arrays.items()}

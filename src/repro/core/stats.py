@@ -40,6 +40,24 @@ import numpy as np
 
 _EPS = 1e-6
 
+#: Saturation guard for the f32 epoch accumulators. f32 stops absorbing
+#: +1-sized increments at 2^24 (ulp = 2), which silently freezes the
+#: selectivity/cost estimates — and with them the adaptive ordering — on
+#: long epochs (collect_rate=1 with a 10^8-row calculate_rate is a real
+#: long-stream config). ``accumulate`` therefore decays every accumulator
+#: by ``SAT_DECAY`` whenever ``n_monitored`` crosses ``SAT_THRESHOLD``:
+#: multiplying an f32 by 0.5 only decrements the exponent (exact, never
+#: rounds), so selectivities and average costs — the RATIOS the rank math
+#: consumes — are preserved bit-for-bit, rank order is untouched, and the
+#: accumulators stay in a range where integer increments remain exact.
+#: Within a super-long epoch the evidence becomes exponentially weighted
+#: toward recent batches, which is the behavior an *adaptive* filter
+#: wants anyway. Epochs shorter than SAT_THRESHOLD monitored rows (every
+#: paper configuration) never trigger it: the scale factor is exactly 1.0
+#: and ``x * 1.0`` is a bit-exact no-op.
+SAT_THRESHOLD = float(1 << 22)
+SAT_DECAY = 0.5
+
 
 def argsort_stable(a, xp=jnp):
     """Stable ascending argsort; the only API seam between numpy and jnp."""
@@ -84,16 +102,28 @@ def merge_stats(a: FilterStats, b: FilterStats) -> FilterStats:
 
 def accumulate(stats: FilterStats, cut_counts, costs, n_monitored,
                group_cut=None, xp=jnp) -> FilterStats:
-    """Fold one batch's monitor-lane results into the epoch accumulators."""
+    """Fold one batch's monitor-lane results into the epoch accumulators.
+
+    Saturation guard (see ``SAT_THRESHOLD``): once the epoch has monitored
+    2^22 rows, every accumulator is decayed by the exact-in-f32 factor 0.5
+    BEFORE the batch folds in, so increments keep landing in a range where
+    f32 absorbs them and the adaptive ordering never freezes. The decay is
+    branchless (``xp.where`` on a scalar) and a bit-exact no-op (×1.0)
+    below the threshold; because ``n_monitored`` advances deterministically
+    (static batch widths), sharded replicas trigger it in lockstep.
+    """
+    scale = xp.where(stats.n_monitored >= SAT_THRESHOLD,
+                     xp.float32(SAT_DECAY), xp.float32(1.0))
     if stats.group_cut is None:
         new_gc = None
     else:
         inc = cut_counts if group_cut is None else group_cut
-        new_gc = stats.group_cut + inc.astype(xp.float32)
+        new_gc = stats.group_cut * scale + inc.astype(xp.float32)
     return FilterStats(
-        num_cut=stats.num_cut + cut_counts.astype(xp.float32),
-        cost_acc=stats.cost_acc + costs.astype(xp.float32),
-        n_monitored=stats.n_monitored + xp.asarray(n_monitored, xp.float32),
+        num_cut=stats.num_cut * scale + cut_counts.astype(xp.float32),
+        cost_acc=stats.cost_acc * scale + costs.astype(xp.float32),
+        n_monitored=stats.n_monitored * scale
+        + xp.asarray(n_monitored, xp.float32),
         group_cut=new_gc,
     )
 

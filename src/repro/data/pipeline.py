@@ -55,16 +55,22 @@ def _as_session(filt, device_tokenize: bool, vocab_size: int,
                 tokens_per_row: int):
     """Normalize a pipeline's filter argument to ONE ``FilterSession``.
 
-    Accepts a ``FilterSession`` (the plan-first path) or a legacy
-    ``AdaptiveFilter`` / ``ShardedAdaptiveFilter`` instance (adopted under a
-    synthesized plan). Returns (session, device_tokenize) with the tokenize
-    stage attached to the session when requested — all combination
-    validation happens in ``FilterPlan``, not here.
+    Accepts a ``FilterSession`` (the plan-first path), a ``GuardedSession``
+    (the self-healing wrapper — it proxies the full session surface, so the
+    pipeline drives it identically and gains quarantine/retry/rollback for
+    free), or a legacy ``AdaptiveFilter`` / ``ShardedAdaptiveFilter``
+    instance (adopted under a synthesized plan). Returns
+    (session, device_tokenize) with the tokenize stage attached to the
+    session when requested — all combination validation happens in
+    ``FilterPlan``, not here.
     """
     from repro.core.session import FilterSession
 
-    session = filt if isinstance(filt, FilterSession) \
-        else FilterSession.from_filter(filt)
+    if isinstance(filt, FilterSession) \
+            or getattr(filt, "is_guarded_session", False):
+        session = filt
+    else:
+        session = FilterSession.from_filter(filt)
     spec = session.plan.tokenize
     if spec is None and device_tokenize:
         spec = TokenizeSpec(vocab_size, tokens_per_row)

@@ -13,6 +13,7 @@ exactly like the data-pipeline filters.
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -23,6 +24,7 @@ from repro.configs import ARCHS, get_config, get_smoke_config
 from repro.core import (FilterPlan, OP_GT, OP_LT, OrderingConfig, Predicate,
                         build_session)
 from repro.models.registry import batch_for, build_model
+from repro.runtime import GracefulShutdown, GuardedSession
 
 
 def guardrail_chain():
@@ -56,6 +58,14 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--guarded", action="store_true",
+                    help="wrap the guardrail session in the self-healing "
+                         "GuardedSession (quarantine poisoned request "
+                         "batches, validate state, degrade on failures) "
+                         "and report its health counters")
+    ap.add_argument("--state-out", default="/tmp/repro_serve_state.json",
+                    help="where a graceful SIGINT/SIGTERM flushes the "
+                         "guardrail OrderState (versioned session blob)")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -71,45 +81,71 @@ def main() -> None:
         predicates=guardrail_chain(),
         ordering=OrderingConfig(collect_rate=4, calculate_rate=64,
                                 momentum=0.3)))
+    if args.guarded:
+        session = GuardedSession(session)
     fstate = session.init_state()
 
     rng = np.random.default_rng(0)
     admitted = rejected = dropped = 0
     fmetrics = {}
     t0 = time.time()
-    for i in range(0, args.requests, args.batch):
-        feats = np.stack([rng.normal(600, 250, args.batch),
-                          rng.beta(2, 8, args.batch),
-                          rng.normal(50, 30, args.batch),
-                          (rng.uniform(size=args.batch) < 0.3).astype(float),
-                          ]).astype(np.float32)
-        fstate, res = session.step(fstate, feats)
-        mask = res.mask_np
-        fmetrics = res.metrics_dict()
-        admitted += int(mask.sum())
-        rejected += int((~mask).sum())
-        dropped += fmetrics["n_dropped"]
-        if not mask.any():
-            continue
-        batch = batch_for(cfg, args.batch, args.prompt_len, kind="prefill")
-        batch.pop("labels", None)
-        logits, cache = prefill(params, batch)
-        cap = args.prompt_len + args.new_tokens
-        cache = _grow_cache(model, cache, args.batch, cap)
-        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-        for t in range(args.new_tokens):
-            if cfg.embeds_input:
-                step_in = jnp.zeros((args.batch, 1, cfg.d_model), jnp.bfloat16)
-            else:
-                step_in = tok
-            logits, cache = decode(params, step_in, cache,
-                                   jnp.asarray(args.prompt_len + t))
+    stop = GracefulShutdown()
+    with stop:
+        for i in range(0, args.requests, args.batch):
+            if stop.requested:
+                break
+            feats = np.stack([rng.normal(600, 250, args.batch),
+                              rng.beta(2, 8, args.batch),
+                              rng.normal(50, 30, args.batch),
+                              (rng.uniform(size=args.batch) < 0.3)
+                              .astype(float),
+                              ]).astype(np.float32)
+            fstate, res = session.step(fstate, feats)
+            mask = res.mask_np
+            fmetrics = res.metrics_dict()
+            admitted += int(mask.sum())
+            rejected += int((~mask).sum())
+            dropped += fmetrics["n_dropped"]
+            if not mask.any():
+                continue
+            batch = batch_for(cfg, args.batch, args.prompt_len,
+                              kind="prefill")
+            batch.pop("labels", None)
+            logits, cache = prefill(params, batch)
+            cap = args.prompt_len + args.new_tokens
+            cache = _grow_cache(model, cache, args.batch, cap)
             tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+            for t in range(args.new_tokens):
+                if cfg.embeds_input:
+                    step_in = jnp.zeros((args.batch, 1, cfg.d_model),
+                                        jnp.bfloat16)
+                else:
+                    step_in = tok
+                logits, cache = decode(params, step_in, cache,
+                                       jnp.asarray(args.prompt_len + t))
+                tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
     dt = time.time() - t0
+    if stop.requested:
+        # graceful shutdown: flush the guardrail state and say how to resume
+        blob = session.save_state(fstate)
+        payload = {k: (v.tolist() if isinstance(v, np.ndarray) else v)
+                   for k, v in blob.items() if k != "arrays"}
+        payload["arrays"] = {k: np.asarray(v).tolist()
+                             for k, v in blob["arrays"].items()}
+        payload["dtypes"] = {k: str(np.asarray(v).dtype)
+                             for k, v in blob["arrays"].items()}
+        with open(args.state_out, "w") as f:
+            json.dump(payload, f)
+        print(f"[serve] shutdown requested: guardrail state flushed to "
+              f"{args.state_out}")
+        print(f"[serve] resume: python -m repro.launch.serve --arch "
+              f"{args.arch} (state blob restores via "
+              "FilterSession.restore_state)")
+    health = f" guard[{session.health.summary()}]" if args.guarded else ""
     print(f"[serve] admitted={admitted} rejected={rejected} "
           f"n_dropped={dropped} "
           f"guardrail perm={fmetrics.get('perm')} "
-          f"epochs={fmetrics.get('epoch')} ({dt:.1f}s)")
+          f"epochs={fmetrics.get('epoch')} ({dt:.1f}s){health}")
 
 
 def _grow_cache(model, cache, batch, capacity):

@@ -26,7 +26,8 @@ from repro.data.stream import DriftConfig, LogStream
 from repro.launch.steps import make_train_step
 from repro.models.registry import build_model
 from repro.optim import AdamWConfig, init_opt_state
-from repro.runtime import FailureInjector, TrainDriver
+from repro.runtime import (FailureInjector, GracefulShutdown, GuardedSession,
+                           TrainDriver)
 
 
 def parse_capacity(text: str | None) -> int | str | None:
@@ -46,7 +47,8 @@ def build_pipeline(cfg, *, batch: int, seq: int, total_rows: int,
                    compact_output: bool = False,
                    compact_capacity: int | str | None = None,
                    exchange: str = "eager",
-                   device_tokenize: bool = False):
+                   device_tokenize: bool = False,
+                   guarded: bool = False):
     """One ingestion pipeline, declared as ONE ``FilterPlan``.
 
     Every CLI knob maps to a plan field (engine × scope × shards ×
@@ -69,6 +71,11 @@ def build_pipeline(cfg, *, batch: int, seq: int, total_rows: int,
         capacity=compact_capacity, exchange=exchange,
         tokenize=TokenizeSpec(cfg.vocab) if device_tokenize else None)
     session = build_session(plan)
+    if guarded:
+        # the self-healing wrapper: quarantine poisoned batches, validate
+        # state at boundaries, retry/degrade/roll back on failures — the
+        # pipeline drives it through the identical step API
+        session = GuardedSession(session)
     if filter_shards > 1:
         from repro.data.pipeline import make_pipeline
         return make_pipeline(session, total_rows=total_rows,
@@ -120,6 +127,10 @@ def main() -> None:
                     help="tokenize/pack the padded compacted buffers on "
                          "device (needs --compact-output); the host only "
                          "ever sees the dense token stream")
+    ap.add_argument("--guarded", action="store_true",
+                    help="wrap the filter session in the self-healing "
+                         "GuardedSession (quarantine poisoned batches, "
+                         "state validation, retry/degrade/rollback)")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--resume", action="store_true")
@@ -148,7 +159,8 @@ def main() -> None:
                               compact_capacity=parse_capacity(
                                   args.compact_capacity),
                               exchange=args.exchange,
-                              device_tokenize=args.device_tokenize)
+                              device_tokenize=args.device_tokenize,
+                              guarded=args.guarded)
 
     driver = TrainDriver(step_fn=step_fn, pipeline=pipeline, params=params,
                          opt_state=opt_state, ckpt_dir=args.ckpt_dir,
@@ -158,12 +170,24 @@ def main() -> None:
         print(f"[train] resumed from step {driver.step}")
 
     t0 = time.time()
-    done = driver.run(args.steps)
+    with GracefulShutdown() as stop:
+        done = driver.run(args.steps, stop=stop)
     dt = time.time() - t0
+    if stop.requested:
+        # the driver already flushed a final checkpoint before returning
+        print(f"[train] shutdown requested at step {driver.step}: "
+              f"checkpoint flushed to {args.ckpt_dir}")
+        print(f"[train] resume: python -m repro.launch.train --resume "
+              f"--ckpt-dir {args.ckpt_dir} --arch {args.arch} "
+              f"--steps {args.steps}"
+              + (" --smoke" if args.smoke else "")
+              + (" --guarded" if args.guarded else ""))
     losses = driver.history
     print(f"[train] done={done} steps={driver.step} "
           f"loss {losses[0]:.3f} -> {losses[-1]:.3f} "
-          f"({dt:.1f}s, {driver.step / max(dt, 1e-9):.2f} steps/s)")
+          f"({dt:.1f}s, {driver.step / max(dt, 1e-9):.2f} steps/s)"
+          + (f" guard[{pipeline._session.health.summary()}]"
+             if args.guarded else ""))
     print(f"[train] pipeline: rows_in={pipeline.rows_in} "
           f"rows_pass={pipeline.rows_pass} "
           f"filter perm={pipeline.last_metrics.get('perm')} "

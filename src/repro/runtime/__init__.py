@@ -1,7 +1,18 @@
 """Runtime substrate: fault-tolerant training driver, failure injection,
-straggler mitigation, elastic rescale."""
+straggler mitigation, elastic rescale, and the guarded (self-healing)
+session runtime."""
 
-from repro.runtime.fault_tolerance import (FailureInjector, TrainDriver,
-                                           StragglerMonitor)
+from repro.runtime.fault_tolerance import (STATE_CORRUPTIONS,
+                                           DataFaultInjector, FailureInjector,
+                                           GracefulShutdown, StragglerMonitor,
+                                           TrainDriver, corrupt_blob,
+                                           corrupt_state)
+from repro.runtime.guard import (GuardedSession, GuardHealth, GuardPolicy,
+                                 GuardStateError)
 
-__all__ = ["FailureInjector", "TrainDriver", "StragglerMonitor"]
+__all__ = [
+    "FailureInjector", "TrainDriver", "StragglerMonitor",
+    "DataFaultInjector", "GracefulShutdown", "corrupt_state", "corrupt_blob",
+    "STATE_CORRUPTIONS",
+    "GuardedSession", "GuardPolicy", "GuardHealth", "GuardStateError",
+]

@@ -1,6 +1,8 @@
 """Fault tolerance: checkpoint atomicity + bit-identical restart, failure
 injection, straggler reassignment, elastic reshard."""
 
+import os
+
 import numpy as np
 import pytest
 
@@ -76,6 +78,77 @@ def test_async_checkpoint(tmp_path):
     assert d.run(8)
     d.manager.wait()
     assert latest_step(tmp_path) == 8
+
+
+def test_npz_crc_fallback_to_previous_step(tmp_path):
+    """Storage rot on the NEWEST committed checkpoint: the manifest's
+    per-array crc32 catches the flip, and an unpinned restore falls back
+    to the previous committed step instead of deserializing garbage."""
+    tree = {"w": np.arange(64, dtype=np.float32)}
+    save_checkpoint(tmp_path, 10, tree, extra={"step": 10})
+    save_checkpoint(tmp_path, 20, tree, extra={"step": 20})
+
+    npz = tmp_path / "step_0000000020" / "shard_0.npz"
+    with np.load(npz) as z:
+        arrays = {k: np.array(z[k]) for k in z.files}
+    key = sorted(arrays)[0]
+    arrays[key].view(np.uint8)[3] ^= 0x10          # one flipped bit
+    np.savez(npz, **arrays)
+
+    got, extra, step = load_checkpoint(tmp_path, tree)   # unpinned: falls back
+    assert step == 10 and extra == {"step": 10}
+    np.testing.assert_array_equal(got["w"], tree["w"])
+    with pytest.raises(ValueError, match="crc32 mismatch"):
+        load_checkpoint(tmp_path, tree, step=20)         # pinned: fails hard
+
+
+def test_npz_all_corrupt_raises(tmp_path):
+    tree = {"w": np.ones(8, np.float32)}
+    save_checkpoint(tmp_path, 1, tree)
+    npz = tmp_path / "step_0000000001" / "shard_0.npz"
+    with np.load(npz) as z:
+        arrays = {k: np.array(z[k]) for k in z.files}
+    next(iter(arrays.values())).view(np.uint8)[0] ^= 1
+    np.savez(npz, **arrays)
+    with pytest.raises(ValueError, match="failed integrity"):
+        load_checkpoint(tmp_path, tree)
+
+
+def test_graceful_shutdown_signal_flow():
+    """First SIGINT sets the flag; a second raises KeyboardInterrupt; the
+    previous handlers come back on exit."""
+    import signal
+
+    from repro.runtime import GracefulShutdown
+
+    prev = signal.getsignal(signal.SIGINT)
+    stop = GracefulShutdown()
+    with stop:
+        assert not stop.requested
+        os.kill(os.getpid(), signal.SIGINT)
+        assert stop.requested
+        with pytest.raises(KeyboardInterrupt):
+            os.kill(os.getpid(), signal.SIGINT)
+    assert signal.getsignal(signal.SIGINT) is prev
+
+
+def test_driver_flushes_checkpoint_on_shutdown(tmp_path):
+    """A pending shutdown makes run() save a final checkpoint and return
+    False (resumable) instead of dying mid-epoch — and the resumed driver
+    picks up exactly where the flush left it."""
+    import types
+
+    d = make_driver(tmp_path, ckpt_every=100)      # never checkpoints on its own
+    assert d.run(4)                                # warm up 4 steps, no ckpt yet
+    assert latest_step(tmp_path) == 4              # (final save at target)
+    stop = types.SimpleNamespace(requested=False)
+    d2 = make_driver(tmp_path / "b", ckpt_every=100)
+    assert d2.run(3, stop=stop)
+    stop.requested = True
+    assert not d2.run(10, stop=stop)               # flushed + returned early
+    assert latest_step(tmp_path / "b") == 3
+    d3 = make_driver(tmp_path / "b", ckpt_every=100)
+    assert d3.try_restore() and d3.step == 3
 
 
 def test_straggler_reassignment():

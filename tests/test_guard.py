@@ -1,0 +1,456 @@
+"""Guarded FilterSession runtime: fault injection, validation, self-healing.
+
+Fast tier: the f32 accumulator-saturation regression (fails on the
+pre-decay ``accumulate``), the fused state validator (300 seeded healthy
+states pass, every ``STATE_CORRUPTIONS`` defect class is detected), the
+crc32 checkpoint envelope, and every recovery path of ``GuardedSession``
+(quarantine, retry+backoff, degrade ladder, storm response, ring
+rollback) — plus the 1-device chaos-soak smoke with survivor bit-parity.
+The full 4-forced-device soak runs in a subprocess (slow tier; CI
+``chaos`` job).
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import FilterPlan, OrderingConfig, build_session, \
+    paper_filters_4, paper_filters_cnf
+from repro.core.stats import (SAT_THRESHOLD, FilterStats, accumulate,
+                              normalized_costs, selectivities)
+from repro.data.pipeline import fstate_to_arrays
+from repro.data.stream import DriftConfig, LogStream
+from repro.runtime import (STATE_CORRUPTIONS, DataFaultInjector,
+                           FailureInjector, GuardedSession, GuardPolicy,
+                           GuardStateError, corrupt_blob, corrupt_state)
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _ordering(**kw):
+    kw.setdefault("collect_rate", 32)
+    kw.setdefault("calculate_rate", 8192)
+    kw.setdefault("momentum", 0.3)
+    return OrderingConfig(**kw)
+
+
+def _plan(**kw):
+    kw.setdefault("predicates", paper_filters_4("fig1"))
+    kw.setdefault("ordering", _ordering())
+    return FilterPlan(**kw)
+
+
+def _batches(n, rows=2048, seed=0, drift=None):
+    stream = LogStream(total_rows=n * rows, batch_rows=rows, seed=seed,
+                       drift=drift or DriftConfig())
+    return [rb.columns for rb in stream]
+
+
+def _policy(**kw):
+    kw.setdefault("sleep", lambda d: None)     # never sleep real time in CI
+    return GuardPolicy(**kw)
+
+
+def _storm_row(plan, cols):
+    """A [C] feature vector every predicate passes: any survivor row."""
+    sess = build_session(plan)
+    _, res = sess.step(sess.init_state(), cols)
+    idx = np.flatnonzero(res.mask_np)
+    assert idx.size, "no survivor in the probe batch"
+    return np.array(cols[:, idx[0]])
+
+
+# ========================================================== f32 saturation
+def test_saturation_regression_increment_absorbed():
+    """REGRESSION (fails on the pre-decay ``accumulate``): at n_monitored
+    = 2^24 the f32 ulp is 2.0, so +1-sized increments were silently
+    absorbed and the accumulators — hence the adaptive ordering — froze.
+    The decay keeps every accumulator in the exact-integer range."""
+    wall = np.float32(2.0 ** 24)
+    assert np.spacing(wall) == 2.0 and wall + np.float32(1.0) == wall
+
+    stats = FilterStats(num_cut=jnp.full((4,), 2.0 ** 23, jnp.float32),
+                        cost_acc=jnp.full((4,), 2.0 ** 23, jnp.float32),
+                        n_monitored=jnp.float32(wall),
+                        group_cut=jnp.full((4,), 2.0 ** 23, jnp.float32))
+    new = accumulate(stats, jnp.ones((4,), jnp.float32),
+                     jnp.ones((4,), jnp.float32), 1.0)
+    # old code: 2^24 + 1 == 2^24 (stalled); fixed: decays to 2^23 + 1
+    assert float(new.n_monitored) != float(stats.n_monitored)
+    assert float(new.n_monitored) == 2.0 ** 23 + 1.0
+    np.testing.assert_array_equal(np.asarray(new.num_cut),
+                                  np.full((4,), 2.0 ** 22 + 1.0, np.float32))
+    np.testing.assert_array_equal(np.asarray(new.group_cut),
+                                  np.full((4,), 2.0 ** 22 + 1.0, np.float32))
+
+
+def test_saturation_decay_preserves_ratios_bitexact():
+    """×0.5 only decrements the f32 exponent: selectivities and normalized
+    costs — the ratios the rank math consumes — are preserved bit-for-bit,
+    so the decay can never flip an ordering decision."""
+    rng = np.random.default_rng(7)
+    stats = FilterStats(
+        num_cut=jnp.asarray(rng.uniform(0, SAT_THRESHOLD, 4), jnp.float32),
+        cost_acc=jnp.asarray(rng.uniform(1, 9, 4) * SAT_THRESHOLD,
+                             jnp.float32),
+        n_monitored=jnp.float32(SAT_THRESHOLD),
+        group_cut=jnp.asarray(rng.uniform(0, SAT_THRESHOLD, 4), jnp.float32))
+    zero = jnp.zeros((4,), jnp.float32)
+    decayed = accumulate(stats, zero, zero, 0.0)     # pure halving
+    assert float(decayed.n_monitored) == SAT_THRESHOLD / 2
+    np.testing.assert_array_equal(np.asarray(selectivities(decayed)),
+                                  np.asarray(selectivities(stats)))
+    np.testing.assert_array_equal(np.asarray(normalized_costs(decayed)),
+                                  np.asarray(normalized_costs(stats)))
+
+
+def test_saturation_below_threshold_is_bitexact_noop():
+    """×1.0 is a bit-exact no-op: every paper-scale epoch accumulates
+    exactly as before the guard existed."""
+    rng = np.random.default_rng(3)
+    stats = FilterStats(
+        num_cut=jnp.asarray(rng.uniform(0, 9e5, 4), jnp.float32),
+        cost_acc=jnp.asarray(rng.uniform(0, 9e5, 4), jnp.float32),
+        n_monitored=jnp.float32(987654.0),
+        group_cut=jnp.asarray(rng.uniform(0, 9e5, 4), jnp.float32))
+    cut = jnp.asarray([3.0, 1.0, 4.0, 1.0], jnp.float32)
+    cost = jnp.asarray([2.0, 7.0, 1.0, 8.0], jnp.float32)
+    new = accumulate(stats, cut, cost, 128.0)
+    np.testing.assert_array_equal(np.asarray(new.num_cut),
+                                  np.asarray(stats.num_cut + cut))
+    np.testing.assert_array_equal(np.asarray(new.cost_acc),
+                                  np.asarray(stats.cost_acc + cost))
+    assert float(new.n_monitored) == 987654.0 + 128.0
+
+
+# ============================================================ state validator
+def test_validator_passes_300_seeded_healthy_states():
+    """Property: every state an honest session can reach validates — 100
+    consecutive states from each of 3 seeded drifting streams, crossing
+    many epoch boundaries (calculate_rate = 4 batches)."""
+    plan = _plan(ordering=_ordering(calculate_rate=4096))
+    sess = build_session(plan)
+    for seed in (0, 1, 2):
+        state = sess.init_state()
+        assert sess.validate_state(state)
+        for cols in _batches(100, rows=1024, seed=seed,
+                             drift=DriftConfig("sine", period_rows=20_000)):
+            state, _ = sess.step(state, cols)
+            assert sess.validate_state(state)
+
+
+def test_validator_detects_every_corruption_class():
+    """Each ``STATE_CORRUPTIONS`` defect violates a distinct invariant;
+    the ONE fused boolean must catch all of them, on flat and CNF chains."""
+    for preds in (paper_filters_4("fig1"), paper_filters_cnf("fig1")):
+        sess = build_session(_plan(predicates=preds))
+        state = sess.init_state()
+        for cols in _batches(3, rows=1024):
+            state, _ = sess.step(state, cols)
+        assert sess.validate_state(state)
+        for kind in STATE_CORRUPTIONS:
+            bad = corrupt_state(state, kind)
+            assert not sess.validate_state(bad), \
+                f"validator missed corruption {kind!r}"
+
+
+# ======================================================== checkpoint crc32
+def test_envelope_crc_rejects_bitflips():
+    sess = build_session(_plan())
+    state = sess.init_state()
+    for cols in _batches(2, rows=1024):
+        state, _ = sess.step(state, cols)
+    blob = sess.save_state(state)
+    assert "crc32" in blob
+    restored = sess.restore_state(blob)            # intact blob round-trips
+    assert sess.validate_state(restored)
+    for seed in range(5):                          # any flipped array trips
+        with pytest.raises(ValueError, match="crc32 mismatch"):
+            sess.restore_state(corrupt_blob(blob, seed=seed))
+
+
+def test_envelope_checksumless_v2_loads_with_warning():
+    sess = build_session(_plan())
+    state = sess.init_state()
+    blob = sess.save_state(state)
+    legacy = {k: v for k, v in blob.items() if k != "crc32"}
+    with pytest.warns(UserWarning, match="checksum-less"):
+        restored = sess.restore_state(legacy)
+    assert sess.validate_state(restored)
+
+
+# ========================================================== guard: admission
+def test_quarantine_poisoned_batch():
+    guard = GuardedSession(build_session(_plan()), _policy())
+    state = guard.init_state()
+    cols = _batches(1, rows=1024)[0].copy()
+    cols[1, 100] = np.nan
+    cols[2, 7] = np.inf
+    before = {k: np.array(v) for k, v in fstate_to_arrays(state).items()}
+    new_state, res = guard.step(state, cols)
+    assert res.quarantined and res.metrics_dict()["quarantined"]
+    assert not res.mask_np.any() and res.n_pass == 0
+    after = fstate_to_arrays(new_state)
+    for k, v in before.items():                    # state did NOT advance
+        np.testing.assert_array_equal(np.asarray(after[k]), v, err_msg=k)
+    assert guard.health.quarantined == 1 and guard.health.steps == 0
+
+
+# ============================================================== guard: retry
+def test_retry_absorbs_transient_failures():
+    delays = []
+    calls = {"n": 0}
+
+    def injector(i):
+        calls["n"] += 1
+        if calls["n"] <= 2:
+            raise RuntimeError("transient node failure")
+
+    guard = GuardedSession(
+        build_session(_plan()),
+        _policy(max_retries=3, backoff_base_s=0.05, jitter=0.0,
+                sleep=delays.append),
+        step_injector=injector)
+    cols = _batches(1, rows=1024)[0]
+    state, res = guard.step(guard.init_state(), cols)
+
+    ref = build_session(_plan())
+    _, ref_res = ref.step(ref.init_state(), cols)
+    np.testing.assert_array_equal(res.mask_np, ref_res.mask_np)
+    assert guard.health.retries == 2 and not res.quarantined
+    assert delays == [0.05, 0.10]                  # exponential, jitter=0
+
+
+def test_backoff_is_bounded_and_jittered():
+    delays = []
+    guard = GuardedSession(
+        build_session(_plan()),
+        _policy(backoff_base_s=0.5, backoff_max_s=1.0, jitter=0.25, seed=1,
+                sleep=delays.append))
+    for attempt in (1, 2, 3):
+        guard._backoff(attempt, 0, RuntimeError("x"))
+    assert delays[0] <= 0.5 * 1.25 and all(d <= 1.25 for d in delays)
+    assert len(set(delays)) == 3               # seeded jitter: all distinct
+
+
+# ===================================================== guard: degrade ladder
+def test_degrade_ladder_pallas_to_jnp():
+    """A persistently-crashing pallas engine degrades to jnp mid-stream;
+    the live OrderState survives (fingerprint excludes the engine) and the
+    survivors match a pure-jnp run bit-for-bit."""
+    holder = {}
+
+    def injector(i):
+        if holder["g"].session.plan.engine == "pallas":
+            raise RuntimeError("pallas kernel crashed")
+
+    guard = GuardedSession(build_session(_plan(engine="pallas")),
+                           _policy(max_retries=1), step_injector=injector)
+    holder["g"] = guard
+    cols = _batches(1, rows=1024)[0]
+    state, res = guard.step(guard.init_state(), cols)
+
+    assert guard.session.plan.engine == "jnp"
+    assert guard.health.degrades[0]["changes"] == {"engine": "jnp"}
+    assert guard.health.retries == 1
+    ref = build_session(_plan())
+    _, ref_res = ref.step(ref.init_state(), cols)
+    np.testing.assert_array_equal(res.mask_np, ref_res.mask_np)
+
+
+def test_degrade_ladder_bottom_reraises():
+    """jnp + no skip tier + no compaction is the bottom rung: a failure
+    that survives the whole ladder surfaces to the caller."""
+    guard = GuardedSession(
+        build_session(_plan()), _policy(max_retries=1),
+        step_injector=lambda i: (_ for _ in ()).throw(
+            RuntimeError("always boom")))
+    with pytest.raises(RuntimeError, match="always boom"):
+        guard.step(guard.init_state(), _batches(1, rows=1024)[0])
+    assert guard.health.degrades == []
+
+
+# ============================================================== guard: storm
+def test_storm_overflow_degrades_losslessly():
+    """An all-pass column storm overflows the bounded capacity; the guard
+    drops to lossless compaction and re-runs the SAME batch from the
+    PRE-step state — every survivor kept, statistics folded exactly once."""
+    plan = _plan(compact=True, capacity=128)
+    probe = _batches(1, rows=1024)[0]
+    storm = np.tile(_storm_row(plan, probe)[:, None], (1, 1024))
+
+    guard = GuardedSession(build_session(plan), _policy())
+    state, res = guard.step(guard.init_state(), storm)
+    assert guard.health.overflow_events == 1
+    assert guard.session.plan.capacity is None     # lossless rung
+    assert res.n_pass == 1024 and res.n_dropped == 0
+    assert any(e["changes"] == {"capacity": "None"}
+               for e in guard.health.degrades)
+    # exactly-once stat fold: one batch's worth of monitored rows
+    ref = build_session(plan)
+    ref_state, _ = ref.step(ref.init_state(), probe)
+    assert float(np.max(np.asarray(state.stats.n_monitored))) == \
+        float(np.max(np.asarray(ref_state.stats.n_monitored)))
+
+
+# =========================================================== guard: rollback
+def test_rollback_restores_from_ring():
+    """Corrupt the live state in flight (validate_every=1 catches it at
+    the very next boundary): the pre-step state is corrupt too, so the
+    guard rolls back to the ring snapshot and re-runs the batch from it —
+    the result matches the fault-free mask bit-for-bit."""
+    plan = _plan()
+    batches = _batches(3, rows=1024)
+
+    ref = build_session(plan)
+    ref_state = ref.init_state()
+    ref_masks = []
+    for cols in batches:
+        ref_state, r = ref.step(ref_state, cols)
+        ref_masks.append(r.mask_np)
+
+    def state_inj(i, st):
+        return corrupt_state(st, "nan_stat") if i == 2 else st
+
+    guard = GuardedSession(build_session(plan),
+                           _policy(validate_every=1, checkpoint_every=100),
+                           state_injector=state_inj)
+    state = guard.init_state()
+    for b, cols in enumerate(batches):
+        state, res = guard.step(state, cols)
+        np.testing.assert_array_equal(res.mask_np, ref_masks[b])
+    assert guard.health.validator_failures == 1
+    assert guard.health.rollbacks == 1
+    assert guard.session.validate_state(state)
+
+
+def test_ring_skips_corrupt_blobs_newest_first():
+    guard = GuardedSession(build_session(_plan()),
+                           _policy(checkpoint_every=1, ring_size=4))
+    state = guard.init_state()
+    for cols in _batches(3, rows=1024):
+        state, _ = guard.step(state, cols)
+    assert len(guard._ring) == 4
+    newest = guard._ring[-1]
+    guard._ring[-1] = newest._replace(blob=corrupt_blob(newest.blob))
+    entry, restored = guard._restore_newest_valid()
+    assert entry.step == guard._ring[-2].step      # fell back one entry
+    assert guard.health.crc_rejects == 1
+    assert guard.session.validate_state(restored)
+
+    guard._ring.clear()
+    for e in [newest._replace(blob=corrupt_blob(newest.blob, seed=s))
+              for s in range(3)]:
+        guard._ring.append(e)
+    with pytest.raises(GuardStateError, match="cannot self-heal"):
+        guard._restore_newest_valid()
+
+
+# ====================================================== chaos soak (1 device)
+POISON_AT = frozenset({3, 11})
+STORM_AT = frozenset({7})
+
+
+def _soak(plan, n_batches, rows, *, drift, fail_at, corrupt_at):
+    """Faulted guarded run + fault-free baseline over the same stream."""
+    base_sess = build_session(plan)
+    bstate = base_sess.init_state()
+    base_masks = {}
+    for rb in LogStream(total_rows=n_batches * rows, batch_rows=rows,
+                        drift=drift):
+        b = rb.row_offset // rows
+        bstate, r = base_sess.step(bstate, rb.columns)
+        base_masks[b] = r.mask_np
+
+    probe = _batches(1, rows=rows)[0]
+    inj = DataFaultInjector(poison_at=POISON_AT, storm_at=STORM_AT,
+                            storm_row=_storm_row(plan, probe))
+    kill = FailureInjector(fail_at_steps=fail_at)
+
+    def state_inj(i, st):
+        return corrupt_state(st, "nan_stat") if i in corrupt_at else st
+
+    guard = GuardedSession(build_session(plan),
+                           _policy(validate_every=1, checkpoint_every=4),
+                           step_injector=kill.maybe_fail,
+                           state_injector=state_inj)
+    stream = LogStream(total_rows=n_batches * rows, batch_rows=rows,
+                       drift=drift)
+    state, results = guard.run_log_stream(stream, batch_hook=inj)
+    return guard, state, results, base_masks
+
+
+def _check_soak(guard, state, results, base_masks, n_batches, rows):
+    assert sorted(results) == list(range(n_batches))
+    for b, res in results.items():
+        if b in POISON_AT:
+            assert res.quarantined and not res.mask_np.any()
+        elif b in STORM_AT:
+            assert res.n_pass == rows              # all-pass, kept lossless
+        else:                                      # SURVIVOR BIT-PARITY
+            np.testing.assert_array_equal(
+                res.mask_np, base_masks[b],
+                err_msg=f"survivor set diverged on clean batch {b}")
+    h = guard.health
+    assert h.quarantined >= len(POISON_AT)
+    assert h.overflow_events >= 1 and h.retries >= 1
+    assert h.validator_failures >= 1 and h.rollbacks >= 1
+    assert any(e["changes"] == {"capacity": "None"} for e in h.degrades)
+    assert guard.session.validate_state(state)
+    d = h.to_dict()
+    assert d["n_degrades"] == len(h.degrades) and "rollbacks" in d
+    assert "quarantined=" in h.summary()
+
+
+def test_chaos_soak_smoke_1dev():
+    """The full fault menu on one device (fast tier): poison, storm, an
+    injected step kill, and live state corruption — the run survives, every
+    recovery is accounted, and clean batches are bit-identical to the
+    fault-free baseline."""
+    n_batches, rows = 16, 2048
+    plan = _plan(compact=True, capacity=256,
+                 ordering=_ordering(calculate_rate=8192))
+    guard, state, results, base_masks = _soak(
+        plan, n_batches, rows,
+        drift=DriftConfig("sine", period_rows=16_000),
+        fail_at={5}, corrupt_at={9})
+    _check_soak(guard, state, results, base_masks, n_batches, rows)
+
+
+@pytest.mark.slow
+def test_chaos_soak_4dev_subprocess():
+    """CI ``chaos`` job: the same soak on a 4-forced-device sharded plan
+    (per-shard scope, stacked [S, P] OrderState through the validator,
+    ring, and rollback paths), in a subprocess so the main pytest process
+    keeps seeing one device."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = SRC
+    code = textwrap.dedent("""
+        import sys
+        sys.path.insert(0, %r)
+        import jax
+        assert jax.device_count() == 4
+        from test_guard import (_check_soak, _ordering, _plan, _soak,
+                                DriftConfig)
+        n_batches, rows = 12, 4096
+        plan = _plan(shards=4, scope="per_shard", compact=True,
+                     capacity=256, ordering=_ordering(calculate_rate=16384))
+        guard, state, results, base_masks = _soak(
+            plan, n_batches, rows,
+            drift=DriftConfig("sine", period_rows=32_000),
+            fail_at={5}, corrupt_at={8})
+        _check_soak(guard, state, results, base_masks, n_batches, rows)
+        print("CHAOS-4DEV-OK", guard.health.summary())
+    """) % os.path.dirname(os.path.abspath(__file__))
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, timeout=600)
+    assert out.returncode == 0, \
+        f"stderr:\n{out.stderr}\nstdout:\n{out.stdout}"
+    assert "CHAOS-4DEV-OK" in out.stdout
