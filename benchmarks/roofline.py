@@ -70,7 +70,13 @@ def filter_ingest_model(*, n_cols: int = 4, tile: int = 2048,
     # survivor prefix, quantized to the 128-lane copy granule
     p_quant = math.ceil(pass_rate * tile / 128) * 128 / tile
     surv = p_quant * col_bytes
-    fused = (chain_only + col_bytes + 4) + (4 + surv + surv)
+    # per-launch split (the repro.analysis.kernel_audit contract: the
+    # captured BlockSpec geometry must reproduce these terms exactly at
+    # pass_rate=1.0 — launch 1 = chain read + mask + packed tile + i32
+    # count; launch 2 = offset + survivor read + stitched write)
+    fused_launch1 = chain_only + col_bytes + 4
+    fused_launch2 = 4 + surv + surv
+    fused = fused_launch1 + fused_launch2
 
     # ---- skip tier: tile-summary traffic + decided-sub-tile read savings
     sub_tiles = tile // 128                             # 128-row sub-tiles
@@ -92,6 +98,8 @@ def filter_ingest_model(*, n_cols: int = 4, tile: int = 2048,
         "bytes_chain_only": chain_only,
         "bytes_unfused_argsort": unfused,
         "bytes_fused": fused,
+        "bytes_fused_launch1": fused_launch1,
+        "bytes_fused_launch2": fused_launch2,
         "fused_traffic_ratio": fused / unfused,
         "skip_fraction": skip_fraction,
         "bytes_summary": summary_bytes,

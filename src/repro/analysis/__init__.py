@@ -1,6 +1,7 @@
-"""repro.analysis: static analysis over plans, compiled HLO, and source.
+"""repro.analysis: static analysis over plans, IR, compiled HLO, kernels,
+and source.
 
-Three passes, one ``Diagnostic`` ABI (code, severity, location, fix hint):
+Six passes, one ``Diagnostic`` ABI (code, severity, location, fix hint):
 
   chain_lint     interval + domain analysis over CNF predicate chains —
                  unsatisfiable predicates/groups/conjunctions, subsumption,
@@ -16,27 +17,55 @@ Three passes, one ``Diagnostic`` ABI (code, severity, location, fix hint):
                  ``int()/float()`` on traced data, ``device_get``,
                  ``block_until_ready``, ``enable_x64``) in functions
                  reachable from the jitted step, with a reasoned allowlist
-                 for the sanctioned syncs.
+                 for the sanctioned syncs (stale entries are errors).
+  jaxpr_lint     IR-tier dataflow lint over the traced session jaxprs —
+                 f64 promotion, captured 0-d device constants (recompile /
+                 tracer-leak hazards), dead subcomputations, degenerate
+                 broadcasts, host callbacks at primitive level, missed
+                 donation opportunities.
+  kernel_audit   static memory-safety verifier over the Pallas kernels:
+                 symbolic in-bounds proof of every BlockSpec index map
+                 across the whole grid, 128-lane/8-sublane tile alignment,
+                 per-grid-step VMEM working-set bound, and a cross-check
+                 that the captured geometry reproduces the roofline byte
+                 model (``benchmarks/roofline.py::filter_ingest_model``).
+  plan_matrix    enumerate the FULL valid plan space via ``validate_combo``,
+                 dedupe by compiled identity, drive hlo_audit + jaxpr_lint
+                 over it under a compile budget; plus the
+                 ``fingerprint_coverage`` checkpoint-partition proof.
 
 CLI: ``python -m repro.analysis --all`` (exits nonzero on error-severity
-findings; ``--json`` for machine consumption, ``--strict`` to also fail
-on warnings).
+findings; ``--json`` for machine consumption, ``--sarif`` for
+code-scanning upload, ``--strict`` to also fail on warnings). Findings
+are ``canonical()``-ized — deterministically ordered, exact duplicates
+removed — before emission.
 """
 
-from repro.analysis.diagnostics import (Diagnostic, SEVERITIES, errors,
-                                        render_report, to_json, warnings_of)
+from repro.analysis.diagnostics import (Diagnostic, SEVERITIES, canonical,
+                                        errors, render_report, to_json,
+                                        to_sarif, warnings_of)
 from repro.analysis.chain_lint import (CanonResult, canonicalize_chain,
                                        lint_chain, lint_tile_proofs)
 from repro.analysis.hlo_audit import (audit_plan, audit_step_text,
                                       collectives_in, has_f64,
                                       host_callbacks_in)
 from repro.analysis.hotpath_lint import ALLOWLIST, lint_hotpath
+from repro.analysis.jaxpr_lint import (lint_jaxpr, lint_plan_jaxprs,
+                                       lint_session_jaxprs)
+from repro.analysis.kernel_audit import (audit_kernels, audit_launches,
+                                         capture_launches)
+from repro.analysis.plan_matrix import (compiled_identity, enumerate_plans,
+                                        fingerprint_coverage, matrix_audit)
 
 __all__ = [
     "Diagnostic", "SEVERITIES", "errors", "warnings_of", "render_report",
-    "to_json",
+    "to_json", "to_sarif", "canonical",
     "lint_chain", "canonicalize_chain", "lint_tile_proofs", "CanonResult",
     "audit_plan", "audit_step_text", "collectives_in", "has_f64",
     "host_callbacks_in",
     "lint_hotpath", "ALLOWLIST",
+    "lint_jaxpr", "lint_session_jaxprs", "lint_plan_jaxprs",
+    "audit_kernels", "audit_launches", "capture_launches",
+    "enumerate_plans", "compiled_identity", "matrix_audit",
+    "fingerprint_coverage",
 ]

@@ -1,13 +1,21 @@
 """CLI: ``python -m repro.analysis`` — run the static-analysis passes.
 
-    python -m repro.analysis --all             # chain + hlo + hotpath
+    python -m repro.analysis --all             # every pass below
     python -m repro.analysis --chain --json    # machine-readable findings
-    python -m repro.analysis --hlo             # compile-audit the plan matrix
+    python -m repro.analysis --hlo             # compile-audit representative plans
     python -m repro.analysis --hotpath         # AST sync lint over the package
+    python -m repro.analysis --jaxpr           # IR dataflow lint (jaxpr tier)
+    python -m repro.analysis --kernels         # Pallas memory-safety verifier
+    python -m repro.analysis --matrix          # full plan-space audit (budgeted)
+    python -m repro.analysis --all --sarif out.sarif   # code-scanning upload
 
 Exit status: nonzero iff any error-severity finding (any finding at all
-under ``--strict``). The CI ``analysis`` job runs ``--all`` on a forced
-4-device host so the collective presence/absence checks bite.
+under ``--strict``). Findings are canonicalized (stable order, exact
+duplicates removed) before counting/emission, so ``--json`` and
+``--sarif`` are byte-reproducible across runs and pass orderings. The CI
+``analysis`` job runs ``--all`` on a forced 4-device host so the
+collective presence/absence checks bite; ``--matrix`` sweeps the deduped
+valid plan space under a compile budget (``--budget``, default 12).
 
 Chain targets: every shape in ``configs.paper_filters.CNF_SHAPES`` under
 the declared paper domains, plus ``build_plan()`` from every example
@@ -113,6 +121,36 @@ def run_hlo_pass(log) -> list:
     return diags
 
 
+def run_jaxpr_pass(log) -> list:
+    """IR-tier dataflow lint over the representative plans' jaxprs."""
+    from repro.analysis import jaxpr_lint
+
+    diags = []
+    plans, _ = _plan_matrix()
+    for name, plan in plans:
+        found = jaxpr_lint.lint_plan_jaxprs(plan)
+        log(diag_lib.render_report(found, title=f"jaxpr: {name}"))
+        diags += found
+    return diags
+
+
+def run_kernel_pass(log) -> list:
+    """Pallas memory-safety verifier + roofline byte-model cross-check."""
+    from repro.analysis import kernel_audit
+
+    found = kernel_audit.audit_kernels()
+    log(diag_lib.render_report(found, title="kernels: filter_chain"))
+    return found
+
+
+def run_matrix_pass(log, budget: int) -> list:
+    from repro.analysis import plan_matrix
+
+    found = plan_matrix.matrix_audit(budget=budget, log=log)
+    log(diag_lib.render_report(found, title="matrix: full plan space"))
+    return found
+
+
 # ------------------------------------------------------------------- driver
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
@@ -125,17 +163,33 @@ def main(argv=None) -> int:
                     help="compile+audit the representative plan matrix")
     ap.add_argument("--hotpath", action="store_true",
                     help="AST host-sync lint over core/kernels/parallel")
+    ap.add_argument("--jaxpr", action="store_true",
+                    help="IR dataflow lint over the traced session jaxprs")
+    ap.add_argument("--kernels", action="store_true",
+                    help="Pallas kernel memory-safety verifier + roofline "
+                         "byte-model cross-check")
+    ap.add_argument("--matrix", action="store_true",
+                    help="audit the FULL valid plan space (deduped by "
+                         "compiled identity, under --budget compiles)")
+    ap.add_argument("--budget", type=int, default=None,
+                    help="compile budget for --matrix (default "
+                         "plan_matrix.DEFAULT_BUDGET; 0 = unlimited)")
     ap.add_argument("--all", action="store_true", help="run all passes")
     ap.add_argument("--json", action="store_true",
                     help="emit findings as a JSON array on stdout")
+    ap.add_argument("--sarif", type=Path, default=None, metavar="PATH",
+                    help="also write findings as SARIF 2.1.0 to PATH "
+                         "(code-scanning upload format)")
     ap.add_argument("--strict", action="store_true",
                     help="exit nonzero on warnings too")
     ap.add_argument("--examples", type=Path, default=None,
                     help="directory of example scripts to collect "
                          "build_plan() chains from (default: ./examples)")
     args = ap.parse_args(argv)
-    if not (args.chain or args.hlo or args.hotpath or args.all):
-        ap.error("pick at least one pass (--chain/--hlo/--hotpath/--all)")
+    if not (args.chain or args.hlo or args.hotpath or args.jaxpr
+            or args.kernels or args.matrix or args.all):
+        ap.error("pick at least one pass (--chain/--hlo/--hotpath/--jaxpr/"
+                 "--kernels/--matrix/--all)")
 
     lines: list[str] = []
     log = lines.append if args.json else print
@@ -153,9 +207,22 @@ def main(argv=None) -> int:
         found = hotpath_lint.lint_hotpath()
         log(diag_lib.render_report(found, title="hotpath: src/repro"))
         diags += found
+    if args.all or args.jaxpr:
+        diags += run_jaxpr_pass(log)
+    if args.all or args.kernels:
+        diags += run_kernel_pass(log)
+    if args.all or args.matrix:
+        from repro.analysis import plan_matrix as plan_matrix_lib
+        budget = plan_matrix_lib.DEFAULT_BUDGET \
+            if args.budget is None else args.budget
+        diags += run_matrix_pass(log, budget)
 
+    diags = diag_lib.canonical(diags)
     n_err = len(diag_lib.errors(diags))
     n_warn = len(diag_lib.warnings_of(diags))
+    if args.sarif is not None:
+        args.sarif.write_text(
+            json.dumps(diag_lib.to_sarif(diags), indent=2) + "\n")
     if args.json:
         print(json.dumps(diag_lib.to_json(diags), indent=2))
     else:

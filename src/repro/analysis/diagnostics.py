@@ -72,5 +72,95 @@ def render_report(diags, *, title: str | None = None) -> str:
     return "\n".join(lines)
 
 
+def canonical(diags) -> list[Diagnostic]:
+    """Deterministic order + exact-duplicate removal.
+
+    The matrix audit runs the same passes over many plans, so findings
+    rooted in shared code (a predicate-chain warning, a kernel note)
+    surface once per plan; exact duplicates carry no information and make
+    ``--json`` output depend on audit order. Canonical form — stable sort
+    by (location, code, severity, message, fix_hint), then dedupe — makes
+    the report a *set*, byte-reproducible across runs and pass orderings.
+    Pinned by ``tests/test_ir_analysis.py``.
+    """
+    order = {s: i for i, s in enumerate(SEVERITIES)}
+    seen: set[tuple] = set()
+    out: list[Diagnostic] = []
+    for d in sorted(diags, key=lambda d: (d.location, d.code,
+                                          order[d.severity], d.message,
+                                          d.fix_hint)):
+        key = (d.code, d.severity, d.location, d.message, d.fix_hint)
+        if key in seen:
+            continue
+        seen.add(key)
+        out.append(d)
+    return out
+
+
 def to_json(diags) -> list[dict]:
     return [dataclasses.asdict(d) for d in diags]
+
+
+# ----------------------------------------------------------------- SARIF
+_SARIF_LEVEL = {"error": "error", "warning": "warning", "info": "note"}
+
+
+def _sarif_location(location: str) -> dict:
+    """Map a Diagnostic location onto a SARIF location object.
+
+    ``file.py:LINE`` becomes a physicalLocation (uri resolved best-effort:
+    as given, else under ``src/repro/``); semantic coordinates
+    (``chain[2]:int_lo``, ``plan:step-hlo``, ``jaxpr:step``) become
+    logicalLocations so viewers still group them.
+    """
+    import pathlib
+
+    path, _, line = location.rpartition(":")
+    if path and line.isdigit() and "." in path:
+        uri = path
+        if not pathlib.Path(uri).exists():
+            cand = pathlib.Path("src/repro") / uri
+            if cand.exists():
+                uri = str(cand)
+        return {"physicalLocation": {
+            "artifactLocation": {"uri": uri},
+            "region": {"startLine": int(line)}}}
+    return {"logicalLocations": [{"fullyQualifiedName": location}]}
+
+
+def to_sarif(diags, *, tool_name: str = "repro-analysis") -> dict:
+    """SARIF 2.1.0 log for code-scanning upload (CI's ``--sarif`` path).
+
+    One run, one rule per distinct code (so the scanning UI groups
+    findings by rule), fix hints carried as the result message's second
+    line. Input should already be ``canonical()`` — this function
+    preserves order, it does not re-sort.
+    """
+    rules: dict[str, dict] = {}
+    results = []
+    for d in diags:
+        rules.setdefault(d.code, {
+            "id": d.code,
+            "defaultConfiguration": {"level": _SARIF_LEVEL[d.severity]},
+        })
+        text = d.message if not d.fix_hint else \
+            f"{d.message}\nhint: {d.fix_hint}"
+        results.append({
+            "ruleId": d.code,
+            "level": _SARIF_LEVEL[d.severity],
+            "message": {"text": text},
+            "locations": [_sarif_location(d.location)],
+        })
+    return {
+        "$schema": "https://raw.githubusercontent.com/oasis-tcs/sarif-spec/"
+                   "master/Schemata/sarif-schema-2.1.0.json",
+        "version": "2.1.0",
+        "runs": [{
+            "tool": {"driver": {
+                "name": tool_name,
+                "informationUri": "https://arxiv.org/abs/1905.01349",
+                "rules": sorted(rules.values(), key=lambda r: r["id"]),
+            }},
+            "results": results,
+        }],
+    }

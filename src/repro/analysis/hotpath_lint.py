@@ -271,6 +271,22 @@ def lint_hotpath(package_root: str | Path | None = None,
 
     reachable = _reachable(fns, roots)
     diags: list[Diagnostic] = []
+    # a stale allowlist entry is an ERROR, not noise: it means a sanctioned
+    # sync was renamed/removed and its exemption now silently dangles —
+    # the next function to take the name inherits a free pass nobody
+    # reviewed. Keys must resolve by qualname or bare name in the index.
+    known_quals = {fn.qualname for fn in fns}
+    known_names = {fn.name for fn in fns}
+    for key in sorted(allow):
+        if key not in known_quals and key not in known_names:
+            diags.append(Diagnostic(
+                "hotpath-stale-allowlist", "error", f"allowlist:{key}",
+                f"ALLOWLIST entry {key!r} matches no indexed function "
+                "(qualname or bare name) under "
+                f"{'/'.join(SCAN_DIRS)} — the sanctioned sync it "
+                "described was renamed or removed",
+                "delete the entry, or re-key it to the function's current "
+                "qualname"))
     for fn in fns:
         if fn.qualname not in reachable:
             continue

@@ -1,0 +1,254 @@
+"""IR-tier dataflow lint over traced jaxprs.
+
+``hlo_audit`` greps compiled modules — cheap but coarse: by HLO time the
+compiler has fused away the structure that explains a finding. This pass
+runs one level earlier, on the jaxpr from ``jax.make_jaxpr``, where every
+primitive still carries its operand/result avals and closed-over
+constants are first-class. Six rules, each a dataflow scan over the
+closed jaxpr (recursing into ``pjit``/``cond``/``while``/``shard_map``
+subjaxprs):
+
+  jaxpr-f64                 error    a float64 aval anywhere (operand,
+                                     result, or closed-over constant) —
+                                     the u32-limb tokenizer and the f32
+                                     kernel ABI both break under x64
+  jaxpr-host-callback       error    callback/infeed/outfeed primitives —
+                                     complements the HLO custom-call grep
+                                     at the level where the offending op
+                                     is still named
+  jaxpr-scalar-capture      warning  a 0-d closed-over constant: a python
+                                     scalar (or 0-d array) captured by the
+                                     traced closure bakes a trace-time
+                                     value into the executable — change it
+                                     and the old trace silently keeps
+                                     running (recompile hazard)
+  jaxpr-dead-code           warning  an effect-free equation whose outputs
+                                     are never consumed — work XLA will
+                                     DCE, but its presence means the
+                                     source computes something it throws
+                                     away
+  jaxpr-degenerate-broadcast info    broadcast_in_dim to the operand's own
+                                     shape (a no-op reshape smell)
+  jaxpr-missed-donation     info     input buffers whose shape/dtype match
+                                     an output — donation candidates; the
+                                     state-threading step legitimately
+                                     matches, so this stays advisory
+
+Entry points: ``lint_jaxpr`` for one ``ClosedJaxpr`` (the seeded-defect
+tests drive this directly) and ``lint_session_jaxprs`` which pulls every
+jitted callable of a ``FilterSession`` via ``FilterSession.make_jaxprs``
+and lints each.
+"""
+
+from __future__ import annotations
+
+from repro.analysis.diagnostics import Diagnostic
+
+#: primitive names that move data to/from the host at trace level
+_CALLBACK_MARKERS = ("callback", "infeed", "outfeed", "host_local")
+
+#: data-movement/selection primitives EXCLUDED from the dead-code scan:
+#: jax's own transform machinery synthesizes dead ones (vmap of
+#: lax.switch evaluates every branch and select_n's the results; the
+#: unchosen branches' shuffles stay in the jaxpr with dropped outputs).
+#: Flagging those would indict the batching rules, not the source — the
+#: rule is after discarded COMPUTE (sin/mul/reduce/...), which is what
+#: "the source pays trace time for nothing" actually means.
+_DEAD_CODE_EXEMPT = frozenset({
+    "select_n", "broadcast_in_dim", "concatenate", "convert_element_type",
+    "reshape", "transpose", "squeeze", "slice", "dynamic_slice", "copy",
+})
+
+
+# ------------------------------------------------------------- jaxpr walking
+def _iter_jaxprs(v):
+    """Yield every (sub)jaxpr reachable from an eqn param value."""
+    if v is None:
+        return
+    if hasattr(v, "jaxpr") and hasattr(v.jaxpr, "eqns"):   # ClosedJaxpr
+        yield v.jaxpr
+        return
+    if hasattr(v, "eqns") and hasattr(v, "invars"):        # raw Jaxpr
+        yield v
+        return
+    if isinstance(v, (tuple, list)):
+        for item in v:
+            yield from _iter_jaxprs(item)
+
+
+def _closed_consts(v):
+    """Closed-over constants of an eqn param value, when it carries any."""
+    if hasattr(v, "consts") and hasattr(v, "jaxpr"):
+        return list(v.consts)
+    if isinstance(v, (tuple, list)):
+        out = []
+        for item in v:
+            out.extend(_closed_consts(item))
+        return out
+    return []
+
+
+def _walk(jaxpr, depth=0):
+    """(eqn, depth) over a jaxpr and all its subjaxprs."""
+    for eqn in jaxpr.eqns:
+        yield eqn, depth
+        for v in eqn.params.values():
+            for sub in _iter_jaxprs(v):
+                yield from _walk(sub, depth + 1)
+
+
+def _is_dropvar(var) -> bool:
+    return type(var).__name__ == "DropVar"
+
+
+def _aval(var):
+    return getattr(var, "aval", None)
+
+
+def _is_f64(aval) -> bool:
+    dtype = getattr(aval, "dtype", None)
+    return dtype is not None and str(dtype) == "float64"
+
+
+# ------------------------------------------------------------------ the pass
+def lint_jaxpr(closed_jaxpr, *, name: str) -> list[Diagnostic]:
+    """Run every IR rule over one ``ClosedJaxpr``.
+
+    ``name`` labels the traced callable (``step``, ``exchange``, ...);
+    findings locate as ``jaxpr:{name}``.
+    """
+    diags: list[Diagnostic] = []
+    loc = f"jaxpr:{name}"
+    jaxpr = closed_jaxpr.jaxpr
+
+    # ---- closed-over constants: f64 + 0-d scalar captures
+    consts = list(closed_jaxpr.consts)
+    for eqn, _ in _walk(jaxpr):
+        for v in eqn.params.values():
+            consts.extend(_closed_consts(v))
+    n_scalar = 0
+    for c in consts:
+        if getattr(c, "ndim", None) == 0:
+            n_scalar += 1
+        if _is_f64(_aval(c)) or str(getattr(c, "dtype", "")) == "float64":
+            diags.append(Diagnostic(
+                "jaxpr-f64", "error", loc,
+                f"closed-over constant with dtype float64 in '{name}'",
+                "keep captured constants f32 (jnp.float32(...)) — x64 "
+                "recompiles the world and breaks the u32-limb contract"))
+    if n_scalar:
+        diags.append(Diagnostic(
+            "jaxpr-scalar-capture", "warning", loc,
+            f"{n_scalar} 0-d closed-over constant(s) in '{name}': a "
+            "captured python scalar bakes its trace-time value into the "
+            "executable — updating it later silently reuses the stale "
+            "trace",
+            "thread the scalar as a traced argument, or mark it static "
+            "(static_argnames) so a change forces a visible retrace"))
+
+    # ---- per-equation scans
+    n_donation = 0
+    for eqn, _ in _walk(jaxpr):
+        prim = eqn.primitive.name
+        if any(m in prim for m in _CALLBACK_MARKERS):
+            diags.append(Diagnostic(
+                "jaxpr-host-callback", "error", loc,
+                f"host-callback primitive '{prim}' inside '{name}' — a "
+                "device→host round trip on every invocation",
+                "hoist the host work into the session driver between jit "
+                "calls (see hotpath_lint's allowlist contract)"))
+        for var in (*eqn.invars, *eqn.outvars):
+            if _is_f64(_aval(var)):
+                diags.append(Diagnostic(
+                    "jaxpr-f64", "error", loc,
+                    f"float64 aval at primitive '{prim}' in '{name}'",
+                    "find the promotion source (python float math on a "
+                    "traced value, np.float64 constant) and pin it to f32"))
+                break
+        if prim == "broadcast_in_dim":
+            in_aval, out_aval = _aval(eqn.invars[0]), _aval(eqn.outvars[0])
+            if (in_aval is not None and out_aval is not None
+                    and in_aval.shape == out_aval.shape):
+                diags.append(Diagnostic(
+                    "jaxpr-degenerate-broadcast", "info", loc,
+                    f"broadcast_in_dim to its own shape {in_aval.shape} "
+                    f"in '{name}' (no-op)",
+                    "drop the broadcast; it is shape bookkeeping only"))
+
+    # ---- dead code: per jaxpr LEVEL, effect-free eqns nobody consumes.
+    # jax's trace finalization rewrites unused outvars to DropVar, so an
+    # eqn whose outputs are ALL dropped (or all unconsumed) is the "source
+    # computed something and threw it away" case.
+    def _dead_scan(jx):
+        used = {id(v) for v in jx.outvars if not _is_dropvar(v)}
+        for eqn in jx.eqns:
+            for v in eqn.invars:
+                used.add(id(v))
+        for eqn in jx.eqns:
+            if eqn.outvars and not eqn.effects \
+                    and eqn.primitive.name not in _DEAD_CODE_EXEMPT \
+                    and all(_is_dropvar(v) or id(v) not in used
+                            for v in eqn.outvars):
+                diags.append(Diagnostic(
+                    "jaxpr-dead-code", "warning", loc,
+                    f"'{eqn.primitive.name}' result is never consumed in "
+                    f"'{name}' — dead subcomputation",
+                    "delete the unused computation at the source (XLA "
+                    "would DCE it, but the source still pays trace time)"))
+            for v in eqn.params.values():
+                for sub in _iter_jaxprs(v):
+                    _dead_scan(sub)
+
+    _dead_scan(jaxpr)
+
+    # ---- missed donation: top-level invars aliasable onto outvars
+    out_sigs: dict[tuple, int] = {}
+    for v in jaxpr.outvars:
+        aval = _aval(v)
+        if aval is not None and getattr(aval, "ndim", 0) >= 1:
+            sig = (aval.shape, str(aval.dtype))
+            out_sigs[sig] = out_sigs.get(sig, 0) + 1
+    for v in jaxpr.invars:
+        aval = _aval(v)
+        if aval is None or getattr(aval, "ndim", 0) < 1:
+            continue
+        sig = (aval.shape, str(aval.dtype))
+        if out_sigs.get(sig, 0) > 0:
+            out_sigs[sig] -= 1
+            n_donation += 1
+    if n_donation:
+        diags.append(Diagnostic(
+            "jaxpr-missed-donation", "info", loc,
+            f"{n_donation} input buffer(s) of '{name}' match an output's "
+            "shape/dtype — donation candidates (the threaded OrderState "
+            "legitimately matches; jit(donate_argnums=...) would reuse "
+            "the buffers)",
+            "advisory: donate state-sized args if peak memory matters"))
+    return diags
+
+
+# -------------------------------------------------------------- session glue
+def lint_session_jaxprs(session, batch) -> list[Diagnostic]:
+    """Trace every jitted callable the session drives and lint each.
+
+    ``batch``: host f32[C, R] (R a multiple of the shard count); the trace
+    shapes match what ``FilterSession.step`` would dispatch.
+    """
+    diags: list[Diagnostic] = []
+    for name, closed in session.make_jaxprs(batch).items():
+        diags.extend(lint_jaxpr(closed, name=name))
+    return diags
+
+
+def lint_plan_jaxprs(plan, *, rows_per_shard: int = 512) -> list[Diagnostic]:
+    """Build a session from ``plan`` and lint all its traced callables."""
+    import numpy as np
+
+    from repro.core.session import build_session
+
+    session = build_session(plan)
+    n_cols = max(p.column for p in plan.predicates) + 1
+    rng = np.random.default_rng(0)
+    batch = rng.uniform(-64, 64, (n_cols, rows_per_shard
+                                  * session.num_shards)).astype(np.float32)
+    return lint_session_jaxprs(session, batch)

@@ -1,0 +1,272 @@
+"""Exhaustive plan-space audit: every valid FilterPlan combination.
+
+The representative five-plan matrix in the CLI covers each audited
+contract once; this pass closes the gap Lyu et al. (arxiv 2403.00995)
+call out for large adaptive parameter spaces — the tooling must sweep the
+space itself, not the default configuration. Three stages:
+
+  enumerate    the full engine × scope × exchange × shards × compaction ×
+               tokenize × skip-tier × cost-mode product, filtered through
+               ``FilterPlan``'s constructor (``validate_combo`` IS the
+               validity oracle — this pass cannot drift from it);
+  dedupe       by *compiled identity*: the tuple of properties that
+               change which XLA modules a session compiles (host engines
+               fall back to the jnp step; 'auto' capacity compiles the
+               same module family as a fixed width; 'auto' skip tier
+               resolves to its measured on-arm). Two plans with equal
+               identity compile byte-identical module structures, so
+               auditing one audits both;
+  audit        drive ``hlo_audit.audit_plan`` + ``jaxpr_lint`` over the
+               deduped set under a compile budget, selected greedily for
+               axis-value coverage (every identity-axis value appears in
+               at least one audited plan before any value appears twice).
+               Whatever the budget excludes is LOGGED, never silently
+               dropped.
+
+Also home of ``fingerprint_coverage``: the checkpoint-compatibility
+contract that every ``FilterPlan`` field is either hashed by
+``fingerprint()`` or declared in ``plan.FINGERPRINT_RUNTIME_ONLY`` —
+proven behaviorally, by constructing plan pairs that differ in exactly
+one field and comparing fingerprints.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.analysis.diagnostics import Diagnostic
+
+#: default compile budget for the matrix audit (CI overrides via --budget)
+DEFAULT_BUDGET = 12
+
+
+# -------------------------------------------------------------- enumeration
+def _scope_exchange():
+    yield "per_shard", "eager"
+    yield "per_batch", "eager"
+    for ex in ("eager", "deferred", "deferred-async"):
+        yield "centralized", ex
+
+
+def enumerate_plans():
+    """Every valid plan combination as (name, FilterPlan), deterministic.
+
+    Validity is decided by constructing the plan — ``FilterPlan.__post_init__``
+    funnels through ``validate_combo``, the single source of cross-field
+    rules — so this enumeration can never disagree with the validator.
+    """
+    import jax
+
+    from repro.core import engine as engine_lib
+    from repro.core.plan import FilterPlan, TokenizeSpec
+    from repro.core.predicates import paper_filters_4
+
+    preds = paper_filters_4("fig1")
+    shard_choices = (1, 4) if jax.device_count() >= 4 else (1,)
+    compact_choices = (("plain", False, None), ("batchcap", True, None),
+                       ("cap512", True, 512), ("autocap", True, "auto"))
+    out = []
+    for engine in engine_lib.available_engines():
+        for scope, exchange in _scope_exchange():
+            for shards in shard_choices:
+                for cname, compact, capacity in compact_choices:
+                    for tokenize in (None, TokenizeSpec(32000)):
+                        for skip in ("off", "zonemap", "zonemap+bloom",
+                                     "auto"):
+                            for cost in ("static", "measured"):
+                                name = (f"{engine}/{scope}/{exchange}/"
+                                        f"sh{shards}/{cname}/"
+                                        f"tok{int(tokenize is not None)}/"
+                                        f"{skip}/{cost}")
+                                try:
+                                    plan = FilterPlan(
+                                        predicates=preds, engine=engine,
+                                        scope=scope, exchange=exchange,
+                                        shards=shards, compact=compact,
+                                        capacity=capacity,
+                                        tokenize=tokenize, skip_tier=skip,
+                                        cost_mode=cost)
+                                except ValueError:
+                                    continue
+                                out.append((name, plan))
+    return out
+
+
+# --------------------------------------------------------- compiled identity
+def compiled_identity(plan) -> tuple:
+    """The properties that decide which XLA module structures a session
+    compiles. Equal identity ⇒ byte-identical module structure ⇒ one
+    audit covers the whole equivalence class."""
+    from repro.core.engine import get_engine
+    from repro.core.predicates import OP_EQ
+
+    eng = get_engine(plan.engine)
+    step_engine = plan.engine if eng.traceable else "jnp"   # host fallback
+    cap = plan.capacity
+    cap_kind = "batch" if cap is None else "fixed"          # auto ≡ fixed:
+    # the auto tuner re-quantizes WIDTH, not module structure
+    skip = plan.skip_tier
+    if skip == "auto":                                      # tuner's on-arm
+        skip = "zonemap+bloom" \
+            if any(p.op == OP_EQ for p in plan.predicates) else "zonemap"
+    return (("engine", step_engine), ("scope", plan.scope),
+            ("exchange", plan.exchange), ("shards", plan.shards),
+            ("compact", cap_kind if plan.compact else "off"),
+            ("tokenize", plan.tokenize is not None), ("skip", skip),
+            ("cost", plan.cost_mode))
+
+
+def dedupe_plans(named):
+    """First representative per compiled identity, enumeration order."""
+    seen, out = set(), []
+    for name, plan in named:
+        key = compiled_identity(plan)
+        if key in seen:
+            continue
+        seen.add(key)
+        out.append((name, plan, key))
+    return out
+
+
+def select_within_budget(deduped, budget: int):
+    """Greedy axis-value coverage: pick the plan adding the most unseen
+    (axis, value) pairs until the budget is spent or coverage saturates.
+    Returns (selected, skipped) — both deterministic."""
+    if budget <= 0 or budget >= len(deduped):
+        return list(deduped), []
+    covered: set = set()
+    remaining = list(deduped)
+    selected = []
+    while remaining and len(selected) < budget:
+        best_i, best_gain = 0, -1
+        for i, (_, _, key) in enumerate(remaining):
+            gain = len(set(key) - covered)
+            if gain > best_gain:
+                best_i, best_gain = i, gain
+        if best_gain == 0:
+            covered = set()  # every axis value covered — start a fresh
+            continue         # round so the rest of the budget still buys
+            # maximally-diverse COMBINATIONS, not arbitrary ones
+        pick = remaining.pop(best_i)
+        covered |= set(pick[2])
+        selected.append(pick)
+    return selected, remaining
+
+
+# ------------------------------------------------------------------- audits
+def matrix_audit(*, budget: int = DEFAULT_BUDGET, rows_per_shard: int = 512,
+                 log=print) -> list[Diagnostic]:
+    """Compile-audit (HLO) + IR-lint (jaxpr) the deduped valid plan space
+    under ``budget`` compiles. Exclusions are logged, never silent."""
+    from repro.analysis import hlo_audit, jaxpr_lint
+
+    named = enumerate_plans()
+    deduped = dedupe_plans(named)
+    selected, skipped = select_within_budget(deduped, budget)
+    log(f"matrix: {len(named)} valid plan combination(s), "
+        f"{len(deduped)} distinct compiled identities, auditing "
+        f"{len(selected)} (budget {budget or 'unlimited'})")
+    if skipped:
+        log("matrix: identity-equivalent or beyond budget, NOT audited: "
+            + ", ".join(name for name, _, _ in skipped[:8])
+            + (f" … +{len(skipped) - 8} more" if len(skipped) > 8 else ""))
+    diags: list[Diagnostic] = []
+    for name, plan, _ in selected:
+        found = list(hlo_audit.audit_plan(plan,
+                                          rows_per_shard=rows_per_shard))
+        found += jaxpr_lint.lint_plan_jaxprs(plan,
+                                             rows_per_shard=rows_per_shard)
+        log(f"matrix: {name}: {len(found)} finding(s)")
+        diags += found
+    diags += fingerprint_coverage()
+    return diags
+
+
+# ----------------------------------------------------- fingerprint coverage
+def _probe_pairs():
+    """Per-field (base_kwargs, variant_kwargs) plan pairs differing in
+    exactly that field — both sides valid by construction."""
+    from repro.core.ordering import OrderingConfig
+    from repro.core.plan import TokenizeSpec
+    from repro.core.predicates import paper_filters_4
+
+    preds = paper_filters_4("fig1")
+    return {
+        "predicates": ({}, {"predicates": preds[:-1]}),
+        "ordering": ({}, {"ordering": OrderingConfig(collect_rate=77)}),
+        "engine": ({"engine": "jnp"}, {"engine": "pallas"}),
+        "scope": ({"scope": "per_shard"}, {"scope": "per_batch"}),
+        "shards": ({"shards": 1}, {"shards": 2}),
+        "axis_name": ({"axis_name": "data"}, {"axis_name": "x"}),
+        "adaptive": ({"adaptive": True}, {"adaptive": False}),
+        "cost_mode": ({"engine": "numpy", "cost_mode": "static"},
+                      {"engine": "numpy", "cost_mode": "measured"}),
+        "compact": ({"compact": False}, {"compact": True}),
+        "capacity": ({"compact": True, "capacity": None},
+                     {"compact": True, "capacity": 256}),
+        "slack": ({"slack": 1.5}, {"slack": 2.0}),
+        "exchange": ({"scope": "centralized", "exchange": "eager"},
+                     {"scope": "centralized", "exchange": "deferred"}),
+        "tokenize": ({"compact": True, "tokenize": None},
+                     {"compact": True, "tokenize": TokenizeSpec(1000)}),
+        "skip_tier": ({"skip_tier": "off"}, {"skip_tier": "zonemap"}),
+    }
+
+
+def fingerprint_coverage(runtime_only=None) -> list[Diagnostic]:
+    """Every ``FilterPlan`` field must be hashed by ``fingerprint()`` XOR
+    declared runtime-only — the checkpoint-compatibility partition.
+
+    Behavioral proof per field: build two valid plans differing only in
+    that field and compare fingerprints. A field with no probe pair and
+    no declaration is itself an error — a brand-new field cannot ship
+    without picking a side. ``runtime_only`` overrides the declared set
+    (the seeded-defect tests simulate drifted declarations with it).
+    """
+    from repro.core import plan as plan_lib
+    from repro.core.predicates import paper_filters_4
+
+    declared = plan_lib.FINGERPRINT_RUNTIME_ONLY \
+        if runtime_only is None else frozenset(runtime_only)
+    probes = _probe_pairs()
+    preds = paper_filters_4("fig1")
+
+    def build(kw):
+        kw = dict(kw)
+        kw.setdefault("predicates", preds)
+        return plan_lib.FilterPlan(**kw)
+
+    diags: list[Diagnostic] = []
+    for field in dataclasses.fields(plan_lib.FilterPlan):
+        name = field.name
+        loc = f"plan:fingerprint:{name}"
+        if name not in probes:
+            if name not in declared:
+                diags.append(Diagnostic(
+                    "plan-fingerprint-unprobed", "error", loc,
+                    f"FilterPlan.{name} has no fingerprint-coverage probe "
+                    "and is not declared runtime-only — its checkpoint-"
+                    "compatibility contract is undefined",
+                    "add a probe pair to plan_matrix._probe_pairs() (if "
+                    "the field is semantic) or list it in "
+                    "plan.FINGERPRINT_RUNTIME_ONLY (if execution-only)"))
+            continue
+        base_kw, var_kw = probes[name]
+        hashed = build(base_kw).fingerprint() != build(var_kw).fingerprint()
+        if hashed and name in declared:
+            diags.append(Diagnostic(
+                "plan-fingerprint-conflict", "error", loc,
+                f"FilterPlan.{name} is declared runtime-only but "
+                "fingerprint() hashes it — checkpoints would refuse to "
+                "move across a field the declaration promises is portable",
+                "remove the field from FINGERPRINT_RUNTIME_ONLY or stop "
+                "hashing it"))
+        elif not hashed and name not in declared:
+            diags.append(Diagnostic(
+                "plan-fingerprint-uncovered", "error", loc,
+                f"FilterPlan.{name} is neither hashed by fingerprint() "
+                "nor declared runtime-only — changing it would silently "
+                "load incompatible checkpoints",
+                "hash the field in fingerprint() or declare it in "
+                "plan.FINGERPRINT_RUNTIME_ONLY"))
+    return diags

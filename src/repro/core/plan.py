@@ -74,6 +74,19 @@ from repro.core.skip_tier import SKIP_TIER_MODES
 #: here because the plan layer must validate it without importing jax)
 MAX_DEVICE_VOCAB = 1 << 24
 
+#: FilterPlan fields EXCLUDED from ``fingerprint()`` by design: execution
+#: details a checkpoint is portable across (engine swap, elastic reshard,
+#: compaction/tokenize wiring, skip-tier speed knobs). Every plan field
+#: must be either hashed by ``fingerprint()`` or listed here —
+#: ``repro.analysis.plan_matrix.fingerprint_coverage`` enforces the
+#: partition behaviorally, so a new field cannot silently break
+#: checkpoint-restore compatibility. Extending this set is a reviewed
+#: diff, exactly like the hotpath allowlist.
+FINGERPRINT_RUNTIME_ONLY = frozenset({
+    "engine", "shards", "axis_name", "compact", "capacity", "slack",
+    "exchange", "tokenize", "skip_tier",
+})
+
 
 # ------------------------------------------------------------- deprecation
 _WARNED: set[str] = set()

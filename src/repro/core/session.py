@@ -561,21 +561,94 @@ class FilterSession:
         if self._jit_validate is None:
             import jax
 
-            cfg = self.plan.ordering
-            n_p = len(self.plan.predicates)
-            n_g = self._core.specs.n_groups
-            # deferred exchange legitimately lets rows_into_epoch overshoot
-            # calculate_rate until the driver fires the boundary
-            bounded = not self._core.exchange_deferred
-
-            def check(s):
-                return state_invariants(
-                    s, n_predicates=n_p, n_groups=n_g,
-                    collect_rate=cfg.collect_rate,
-                    calculate_rate=cfg.calculate_rate, rows_bounded=bounded)
-
-            self._jit_validate = jax.jit(check)
+            self._jit_validate = jax.jit(self._invariants_fn())
         return bool(np.asarray(self._jit_validate(state)))
+
+    def _invariants_fn(self):
+        """The fused invariant check ``validate_state`` jits (also traced
+        un-jitted by ``make_jaxprs`` for the IR lint)."""
+        cfg = self.plan.ordering
+        n_p = len(self.plan.predicates)
+        n_g = self._core.specs.n_groups
+        # deferred exchange legitimately lets rows_into_epoch overshoot
+        # calculate_rate until the driver fires the boundary
+        bounded = not self._core.exchange_deferred
+
+        def check(s):
+            return state_invariants(
+                s, n_predicates=n_p, n_groups=n_g,
+                collect_rate=cfg.collect_rate,
+                calculate_rate=cfg.calculate_rate, rows_bounded=bounded)
+
+        return check
+
+    def make_jaxprs(self, batch) -> dict:
+        """Traced (uncompiled) ``ClosedJaxpr`` per jitted callable this
+        session drives — the IR surface ``repro.analysis.jaxpr_lint``
+        audits.
+
+        Keys: ``step``, ``exchange``, ``validate_state``, plus
+        ``compact`` / ``tokenize`` / ``skip_step`` / ``skip_compact``
+        when the plan enables them. ``batch``: f32[C, R] shaped like a
+        live step's input ([C, S·R] when sharded). Tracing only — nothing
+        compiles or executes except the skip tier's triage, which sizes
+        the static gather width exactly the way a live step would.
+        """
+        import jax
+        import jax.numpy as jnp
+
+        cols = jnp.asarray(batch, jnp.float32)
+        n_local = int(cols.shape[1]) // self.num_shards
+        f = self.filter
+        state = self.init_state()
+        out: dict = {}
+        if self.sharded:
+            out["step"] = jax.make_jaxpr(f.sharded_step)(state, cols)
+            out["exchange"] = jax.make_jaxpr(
+                lambda s: f._sharded_exchange(s))(state)
+        else:
+            out["step"] = jax.make_jaxpr(f.step)(state, cols)
+            out["exchange"] = jax.make_jaxpr(
+                lambda s: f.exchange_update(s))(state)
+        if self.plan.compact:
+            cap = f.resolve_capacity(n_local)
+            if self.sharded:
+                out["compact"] = jax.make_jaxpr(
+                    lambda s, c: f.sharded_step_compact(
+                        s, c, capacity=cap))(state, cols)
+            else:
+                out["compact"] = jax.make_jaxpr(
+                    lambda s, c: f._step_compact(
+                        s, c, capacity=cap))(state, cols)
+            if self.plan.tokenize is not None:
+                from repro.data import tokenizer
+                ts = self.plan.tokenize
+                # per-shard local shapes: the sharded path shard_maps the
+                # same per-shard tokenize body, so this IS its local IR
+                packed = jax.ShapeDtypeStruct((int(cols.shape[0]), cap),
+                                              jnp.float32)
+                cnt = jax.ShapeDtypeStruct((), jnp.int32)
+                out["tokenize"] = jax.make_jaxpr(
+                    lambda p, c: tokenizer.tokens_from_padded(
+                        p, c, ts.vocab_size, ts.tokens_per_row))(packed,
+                                                                 cnt)
+        skip_mode = self._skip_step_mode()
+        if skip_mode != "off":
+            info = f._jit_triage(cols, bloom=skip_mode == "zonemap+bloom")
+            amb_cap = f.skip_amb_cap(info, n_local)
+            if self.plan.compact:
+                cap = f.resolve_capacity(n_local)
+                out["skip_compact"] = jax.make_jaxpr(
+                    lambda s, c, p, fl: f._step_skip_compact(
+                        s, c, p, fl, amb_cap=amb_cap, capacity=cap))(
+                    state, cols, info.pass_tiles, info.fail_tiles)
+            else:
+                out["skip_step"] = jax.make_jaxpr(
+                    lambda s, c, p, fl: f._step_skip(
+                        s, c, p, fl, amb_cap=amb_cap))(
+                    state, cols, info.pass_tiles, info.fail_tiles)
+        out["validate_state"] = jax.make_jaxpr(self._invariants_fn())(state)
+        return out
 
     # ------------------------------------------------------------ analysis
     def compiled_step_text(self, state: OrderState, batch) -> str:

@@ -92,7 +92,12 @@ def _limb_ops():
     import jax.numpy as jnp
     from jax import lax
 
-    u32 = jnp.uint32
+    # numpy scalars, NOT jnp: the closure is functools.cache'd, and a
+    # jnp constant materialized while some outer trace is live would be a
+    # tracer baked into the cache — poisoning every later call
+    # (UnexpectedTracerError). numpy scalars are concrete in every
+    # context and inline into traces as literals.
+    u32 = np.uint32
     M16 = u32(0xFFFF)
 
     def mul32_wide(a, b):

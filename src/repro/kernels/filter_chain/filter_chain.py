@@ -75,17 +75,18 @@ STAT_TILE = 128      # zone-map statistics granularity (= skip_tier.SKIP_TILE)
 def _stats_kernel(cols_ref, min_ref, max_ref, *, tile: int):
     """Skip-tier pre-pass: per-STAT_TILE column min/max for one grid tile.
 
-    One (C, TILE) tile in VMEM → (C, TILE/STAT_TILE) zone-map summaries.
-    The reshape splits the lane dimension into (sub, 128) so each reduction
-    runs over full VPU lanes; a production Mosaic kernel would fuse this
-    into the ingest DMA, but as a separate launch it still reads each byte
-    exactly once and writes only TILE/STAT_TILE summary lanes per column.
+    One (C, TILE) tile in VMEM → (1, C, TILE/STAT_TILE) zone-map
+    summaries. The reshape splits the lane dimension into (sub, 128) so
+    each reduction runs over full VPU lanes; a production Mosaic kernel
+    would fuse this into the ingest DMA, but as a separate launch it still
+    reads each byte exactly once and writes only TILE/STAT_TILE summary
+    lanes per column.
     """
     sub = tile // STAT_TILE
     x = cols_ref[:, :]                                   # f32[C, TILE]
     t3 = x.reshape(cols_ref.shape[0], sub, STAT_TILE)
-    min_ref[:, :] = t3.min(axis=2)
-    max_ref[:, :] = t3.max(axis=2)
+    min_ref[0, :, :] = t3.min(axis=2)
+    max_ref[0, :, :] = t3.max(axis=2)
 
 
 def tile_stats_pallas(columns: jnp.ndarray, *, tile: int = DEFAULT_TILE,
@@ -93,6 +94,13 @@ def tile_stats_pallas(columns: jnp.ndarray, *, tile: int = DEFAULT_TILE,
     """Zone-map summaries of f32[C, Rp] (Rp % tile == 0).
 
     Returns (mins f32[C, Rp/STAT_TILE], maxs f32[C, Rp/STAT_TILE]).
+
+    The launch writes tile-major f32[n_tiles, C, sub] blocks — each grid
+    step owns one fully-covered (1, C, sub) block, so every block's
+    minormost dim is its array's full lane extent (``kernel_audit``'s
+    alignment rule; a (C, sub)-strided lane tile would make Mosaic retile
+    the summary rows on every step). The transpose back to the external
+    f32[C, Rp/STAT_TILE] contract is XLA glue over kilobytes.
     """
     n_cols, n_rows_p = columns.shape
     if n_rows_p % tile:
@@ -100,9 +108,9 @@ def tile_stats_pallas(columns: jnp.ndarray, *, tile: int = DEFAULT_TILE,
     n_tiles = n_rows_p // tile
     sub = tile // STAT_TILE
     kernel = functools.partial(_stats_kernel, tile=tile)
-    out_spec = pl.BlockSpec((n_cols, sub), lambda i: (0, i))
-    out_shape = jax.ShapeDtypeStruct((n_cols, n_tiles * sub), jnp.float32)
-    return pl.pallas_call(
+    out_spec = pl.BlockSpec((1, n_cols, sub), lambda i: (i, 0, 0))
+    out_shape = jax.ShapeDtypeStruct((n_tiles, n_cols, sub), jnp.float32)
+    mins, maxs = pl.pallas_call(
         kernel,
         grid=(n_tiles,),
         in_specs=[pl.BlockSpec((n_cols, tile), lambda i: (0, i))],
@@ -111,6 +119,11 @@ def tile_stats_pallas(columns: jnp.ndarray, *, tile: int = DEFAULT_TILE,
         interpret=interpret,
         name="adaptive_filter_tile_stats",
     )(columns)
+
+    def _flat(a):                    # [T, C, sub] → [C, T·sub]
+        return a.transpose(1, 0, 2).reshape(n_cols, n_tiles * sub)
+
+    return _flat(mins), _flat(maxs)
 
 
 def _eval_pred_tile(cols_ref, col_idx, op, t1, t2, rounds):

@@ -265,7 +265,9 @@ def test_hotpath_detects_injected_item(tmp_path):
             def _helper(self, batch):
                 return batch.sum().item()
     """)
-    found = lint_hotpath(package_root=tmp_path)
+    # empty allowlist: the synthetic tree resolves none of the real
+    # entries, and stale entries are themselves errors now
+    found = lint_hotpath(package_root=tmp_path, allowlist={})
     assert _codes(found) == ["hotpath-host-sync"]
     assert "FilterSession._helper" in found[0].message
     assert found[0].severity == "error"
@@ -285,8 +287,10 @@ def test_hotpath_detects_enable_x64(tmp_path):
                 jax.config.update("jax_enable_x64", True)
                 return batch
     """)
-    found = lint_hotpath(package_root=tmp_path)
+    found = lint_hotpath(package_root=tmp_path,
+                         allowlist={"FilterSession.step": "the driver"})
     assert "hotpath-enable-x64" in _codes(found)
+    assert "hotpath-stale-allowlist" not in _codes(found)
 
 
 def test_hotpath_unreachable_code_not_flagged(tmp_path):
@@ -298,7 +302,7 @@ def test_hotpath_unreachable_code_not_flagged(tmp_path):
         def offline_report(arrs):
             return [a.item() for a in arrs]     # never on the hot path
     """)
-    assert lint_hotpath(package_root=tmp_path) == []
+    assert lint_hotpath(package_root=tmp_path, allowlist={}) == []
 
 
 def test_hotpath_injection_into_real_tree(tmp_path):
