@@ -1,6 +1,7 @@
-"""Serving example: batched requests through an adaptive guardrail chain
-(the paper's operator on the serving path) into prefill + decode of a
-reduced gemma2 config.
+"""Serving example: the continuous-batching admission server — queued
+ingest of a drifting traffic mix, the adaptive guardrail chain as the
+admission gate, and admitted requests packed into real prefill/decode
+slots of a reduced gemma2 config.
 
     PYTHONPATH=src python examples/serve_guardrail_filters.py
 """
@@ -22,13 +23,16 @@ def build_plan():
                                 momentum=0.3))
 
 
-def main() -> None:
+def main() -> int:
     requests = os.environ.get("EXAMPLES_SMOKE_REQUESTS", "64")
-    sys.argv = [sys.argv[0], "--arch", "gemma2-9b", "--smoke",
-                "--requests", requests, "--batch", "8",
-                "--prompt-len", "64", "--new-tokens", "8"]
-    serve.main()
+    return serve.main([
+        "--smoke", "--executor", "model", "--arch", "gemma2-9b",
+        "--requests", requests, "--batch", "8", "--slots", "4",
+        "--prompt-len", "64", "--new-tokens", "8",
+        "--bench-out", os.environ.get("EXAMPLES_BENCH_OUT",
+                                      "/tmp/BENCH_serve_example.json"),
+    ])
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

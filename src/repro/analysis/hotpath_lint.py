@@ -40,7 +40,7 @@ from pathlib import Path
 from repro.analysis.diagnostics import Diagnostic
 
 #: packages scanned, relative to the repro package root
-SCAN_DIRS = ("core", "kernels", "parallel")
+SCAN_DIRS = ("core", "kernels", "parallel", "serving")
 
 #: host-side modules excluded from the graph: their job IS host work
 EXCLUDES = (
@@ -62,6 +62,10 @@ ROOTS = (
     "ShardedAdaptiveFilter.sharded_step",
     "ShardedAdaptiveFilter.sharded_step_compact",
     "ShardedAdaptiveFilter._sharded_exchange",
+    # the serving admission step: queue/host glue must not leak syncs
+    # into the gate's drive path (the one sanctioned readback is
+    # AdmissionServer._decide, allowlisted below)
+    "AdmissionServer._gate_batch",
 )
 
 #: qualname → why this host sync is sanctioned. Everything else that
@@ -103,6 +107,11 @@ ALLOWLIST: dict[str, str] = {
         "f32 packing — the arg is never a traced array",
     "bloom_key":
         "trace-time constant: Bloom bit index of a static threshold",
+    "AdmissionServer._decide":
+        "THE serving dequeue→decision sync: answering rejects and "
+        "quarantined batches immediately with a reason code requires "
+        "concretizing the gate mask on the host — one readback per "
+        "micro-batch, by design",
 }
 
 _FORBIDDEN_METHODS = ("item", "block_until_ready")

@@ -79,6 +79,11 @@ class StepResult(NamedTuple):
     # advance — downstream consumers skip the batch instead of folding
     # garbage into the stream (see repro.runtime.guard.GuardedSession)
     quarantined: bool = False
+    # host wall-clock seconds spent DRIVING this step (dispatch + the
+    # sanctioned triage/boundary syncs; no extra device round-trip). The
+    # admission server's per-step gate cost lives here per the ROADMAP
+    # seam rule — on StepResult, not a side API.
+    gate_s: float | None = None
 
     # ------------------------------------------------------- host accessors
     @property
@@ -409,8 +414,11 @@ class FilterSession:
         is due, and the auto-capacity retune; returns the post-exchange
         state and a uniform ``StepResult``.
         """
+        import time
+
         import jax.numpy as jnp
 
+        t_gate = time.perf_counter()
         cols = jnp.asarray(batch, jnp.float32)
         n_local = int(cols.shape[1]) // self.num_shards
         f = self.filter
@@ -420,7 +428,6 @@ class FilterSession:
         skip_mode = self._skip_step_mode()
         auto = self.plan.skip_tier == "auto" and not self.sharded
         if auto:
-            import time
             t0 = time.perf_counter()
         info = None
         if skip_mode != "off":
@@ -477,7 +484,8 @@ class FilterSession:
         # StepResult accessors (which warn once per result), keeping the
         # hot step free of forced device round-trips
         return state, StepResult(mask, packed, n_kept, tokens, n_tokens,
-                                 metrics, cap, warn_cell=[])
+                                 metrics, cap, warn_cell=[],
+                                 gate_s=time.perf_counter() - t_gate)
 
     # ------------------------------------------------- sanctioned host syncs
     # These two helpers are the session driver's ONLY deliberate

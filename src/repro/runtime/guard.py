@@ -36,7 +36,11 @@ ladder*. This module is both ideas applied to the compiled session:
       pallas → jnp engine, skip_tier → off, fused → mask compaction
       (bounded capacity → lossless). Plan fingerprints exclude exactly
       these execution fields, so the live ``OrderState`` and every ring
-      checkpoint stay valid across all rungs.
+      checkpoint stay valid across all rungs. The ladder also climbs
+      back UP: after ``GuardPolicy.promote_after`` consecutive validated
+      boundaries with no fault, the newest degrade is reverted
+      (``GuardHealth.promotes`` records each climb) — transient faults
+      cost throughput only while they last.
 
 Survivor bit-parity: masks depend on the predicate SET, not the evaluation
 order, so quarantine-induced statistic divergence, rollback replay, and
@@ -91,6 +95,11 @@ class GuardPolicy:
     ring_size: int = 4            # last-K integrity-checked checkpoints
     checkpoint_every: int = 16    # steps between ring snapshots
     validate_every: int = 4       # steps between validator syncs
+    # re-promotion: after this many CONSECUTIVE validated boundaries with
+    # no fault of any kind (quarantine/retry/overflow/validator), climb
+    # the degradation ladder back UP one rung (0 disables — degrades are
+    # then permanent for the session's lifetime, the pre-PR-10 behavior)
+    promote_after: int = 0
     seed: int = 0                 # backoff-jitter determinism
     # injectable clock for tests (never sleep real seconds in CI)
     sleep: Callable[[float], None] = time.sleep
@@ -108,10 +117,12 @@ class GuardHealth:
     crc_rejects: int = 0          # ring blobs refused (corrupt/invalid)
     overflow_events: int = 0      # capacity storms degraded to lossless
     degrades: list = dataclasses.field(default_factory=list)
+    promotes: list = dataclasses.field(default_factory=list)
 
     def to_dict(self) -> dict:
         d = dataclasses.asdict(self)
         d["n_degrades"] = len(self.degrades)
+        d["n_promotes"] = len(self.promotes)
         return d
 
     def summary(self) -> str:
@@ -119,7 +130,8 @@ class GuardHealth:
                 f"retries={self.retries} rollbacks={self.rollbacks} "
                 f"crc_rejects={self.crc_rejects} "
                 f"overflows={self.overflow_events} "
-                f"degrades={len(self.degrades)}")
+                f"degrades={len(self.degrades)} "
+                f"promotes={len(self.promotes)}")
 
 
 _RingEntry = collections.namedtuple("_RingEntry", "step cursor blob")
@@ -158,6 +170,12 @@ class GuardedSession:
         self._step_idx = 0
         self._stream_cursor = 0       # set by run_log_stream before steps
         self._raise_rollback = False  # True only under run_log_stream
+        # re-promotion bookkeeping: each degrade pushes the INVERSE plan
+        # changes; ``promote_after`` consecutive fault-free validated
+        # boundaries pop one rung back (see _note_boundary)
+        self._degrade_stack: list[dict] = []
+        self._healthy_boundaries = 0
+        self._fault_since = False     # any fault since the last boundary
 
     # ------------------------------------------------------------ delegation
     def __getattr__(self, name):
@@ -195,6 +213,7 @@ class GuardedSession:
         # ---- data-plane admission: quarantine poisoned batches
         if not self._batch_finite(cols):
             self.health.quarantined += 1
+            self._fault_since = True
             log.warning("guard: quarantined poisoned batch at step %d "
                         "(non-finite values); state unchanged", i)
             return state, self._quarantined_result(state, cols)
@@ -209,6 +228,7 @@ class GuardedSession:
         if res.capacity is not None \
                 and int(np.asarray(res.metrics.n_dropped).sum()) > 0:
             self.health.overflow_events += 1
+            self._fault_since = True
             if self._degrade_lossless(
                     f"capacity overflow at step {i}"):
                 # SAME batch, PRE-step state: survivors recovered losslessly
@@ -221,12 +241,35 @@ class GuardedSession:
         if snapshot_due or self._step_idx % p.validate_every == 0:
             if not self.session.validate_state(new_state):
                 self.health.validator_failures += 1
+                self._fault_since = True
                 new_state, res = self._recover(state, cols, i)
                 snapshot_due = False      # never snapshot a suspect epoch
+            self._note_boundary(i)
         if snapshot_due:
             self._snapshot(new_state)
         self.health.steps += 1
         return new_state, res
+
+    def _note_boundary(self, i: int) -> None:
+        """Validated-boundary bookkeeping for re-promotion: a boundary
+        with no fault since the previous one extends the healthy window;
+        any fault (quarantine/retry/overflow/validator) resets it. After
+        ``policy.promote_after`` consecutive clean boundaries the
+        degradation ladder climbs back UP one rung — a recurring fault
+        simply degrades again, so a flapping rung oscillates with period
+        ``promote_after`` instead of pinning the session at the bottom."""
+        if self._fault_since:
+            self._fault_since = False
+            self._healthy_boundaries = 0
+            return
+        self._healthy_boundaries += 1
+        p = self.policy
+        if p.promote_after > 0 and self._degrade_stack \
+                and self._healthy_boundaries >= p.promote_after:
+            self._promote_once(
+                f"{self._healthy_boundaries} clean validated boundaries "
+                f"ending at step {i}")
+            self._healthy_boundaries = 0
 
     # -------------------------------------------------------------- recovery
     def _step_with_retry(self, state, cols, i: int):
@@ -240,6 +283,7 @@ class GuardedSession:
                 raise
             except Exception as e:           # noqa: BLE001 — retry scope
                 attempt += 1
+                self._fault_since = True
                 if attempt <= self.policy.max_retries:
                     self.health.retries += 1
                     self._backoff(attempt, i, e)
@@ -340,6 +384,25 @@ class GuardedSession:
         return True
 
     def _swap_plan(self, changes: dict, reason: str) -> None:
+        """One rung DOWN: apply ``changes`` and push their inverse so a
+        healthy window can climb back (see ``_note_boundary``)."""
+        inverse = {k: getattr(self.session.plan, k) for k in changes}
+        event = self._apply_plan(changes, reason)
+        self._degrade_stack.append(inverse)
+        self._healthy_boundaries = 0
+        self._fault_since = True
+        self.health.degrades.append(event)
+        log.warning("guard: degraded %s (%s)", event["changes"], reason)
+
+    def _promote_once(self, reason: str) -> None:
+        """One rung UP: pop the newest degrade's inverse and re-apply it.
+        If the fault recurs, the regular ladder degrades again."""
+        changes = self._degrade_stack.pop()
+        event = self._apply_plan(changes, reason)
+        self.health.promotes.append(event)
+        log.info("guard: re-promoted %s (%s)", event["changes"], reason)
+
+    def _apply_plan(self, changes: dict, reason: str) -> dict:
         old = self.session
         new_plan = dataclasses.replace(old.plan, **changes)
         mesh = old.filter.mesh if old.sharded else None
@@ -349,10 +412,18 @@ class GuardedSession:
         # OrderState and all ring blobs remain loadable as-is)
         new._rows_local = old._rows_local
         self.session = new
-        event = {"step": self._step_idx, "reason": reason,
-                 "changes": {k: str(v) for k, v in changes.items()}}
-        self.health.degrades.append(event)
-        log.warning("guard: degraded %s (%s)", event["changes"], reason)
+        return {"step": self._step_idx, "reason": reason,
+                "changes": {k: str(v) for k, v in changes.items()}}
+
+    def health_snapshot(self) -> dict:
+        """Health counters plus the ladder's CURRENT rungs — what the
+        admission server exports into ``BENCH_serve.json``."""
+        d = self.health.to_dict()
+        p = self.session.plan
+        d["rungs"] = {"engine": p.engine, "skip_tier": p.skip_tier,
+                      "compact": p.compact, "capacity": str(p.capacity),
+                      "degrade_depth": len(self._degrade_stack)}
+        return d
 
     # ------------------------------------------------------------------ ring
     def _snapshot(self, state) -> None:
@@ -376,7 +447,8 @@ class GuardedSession:
             adj_rank=np.asarray(state.adj_rank), n_dropped=z32,
             n_tiles_pass=z32, n_tiles_fail=z32, n_tiles_ambiguous=z32)
         return StepResult(np.zeros((n_rows,), bool), None, None, None, None,
-                          metrics, None, warn_cell=None, quarantined=True)
+                          metrics, None, warn_cell=None, quarantined=True,
+                          gate_s=0.0)
 
     # ------------------------------------------------------------ stream run
     def run_log_stream(self, stream, state=None, *,

@@ -299,6 +299,134 @@ def test_storm_overflow_degrades_losslessly():
         float(np.max(np.asarray(ref_state.stats.n_monitored)))
 
 
+# ======================================================= guard: re-promotion
+def test_fault_clears_then_recovers_repromotes():
+    """The ladder climbs back UP: a transiently-crashing pallas engine
+    degrades to jnp; once the fault clears, ``promote_after`` consecutive
+    clean validated boundaries re-promote the engine — and the survivors
+    stay bit-identical to a pure-jnp run across the whole episode (the
+    rungs never change masks)."""
+    holder: dict = {}
+    flaky = {"on": True}
+
+    def injector(i):
+        if flaky["on"] and holder["g"].session.plan.engine == "pallas":
+            raise RuntimeError("transient pallas fault")
+
+    guard = GuardedSession(
+        build_session(_plan(engine="pallas")),
+        _policy(max_retries=1, validate_every=1, promote_after=2),
+        step_injector=injector)
+    holder["g"] = guard
+    batches = _batches(5, rows=1024)
+    ref = build_session(_plan())
+    ref_state = ref.init_state()
+
+    state = guard.init_state()
+    state, res = guard.step(state, batches[0])      # crash → degrade
+    assert guard.session.plan.engine == "jnp"
+    flaky["on"] = False                             # the fault clears
+
+    masks = [res.mask_np]
+    for cols in batches[1:]:
+        state, res = guard.step(state, cols)
+        masks.append(res.mask_np)
+
+    # two clean boundaries after the degrade → back on pallas, and the
+    # re-promoted engine then RAN (batches 4-5) without re-degrading
+    assert guard.session.plan.engine == "pallas"
+    assert len(guard.health.promotes) == 1
+    assert guard.health.promotes[0]["changes"] == {"engine": "pallas"}
+    assert len(guard.health.degrades) == 1
+    for cols, mask in zip(batches, masks):
+        ref_state, ref_res = ref.step(ref_state, cols)
+        np.testing.assert_array_equal(mask, ref_res.mask_np)
+
+
+def test_persistent_fault_oscillates_instead_of_pinning():
+    """A fault that does NOT clear: the rung re-promotes after the
+    healthy window, crashes again, and degrades again — the session
+    oscillates with period ``promote_after`` (and keeps serving) rather
+    than pinning at the bottom or dying."""
+    holder: dict = {}
+
+    def injector(i):
+        if holder["g"].session.plan.engine == "pallas":
+            raise RuntimeError("persistent pallas fault")
+
+    guard = GuardedSession(
+        build_session(_plan(engine="pallas")),
+        _policy(max_retries=1, validate_every=1, promote_after=2),
+        step_injector=injector)
+    holder["g"] = guard
+    state = guard.init_state()
+    for cols in _batches(7, rows=1024):
+        state, _ = guard.step(state, cols)
+    assert len(guard.health.promotes) >= 1
+    assert len(guard.health.degrades) == len(guard.health.promotes) + 1
+    assert guard.session.plan.engine == "jnp"       # currently degraded
+    assert guard.health.steps == 7                  # every batch answered
+
+
+def test_storm_clears_then_capacity_repromotes():
+    """The lossless storm response reverts too: after the storm passes
+    and the healthy window elapses, the bounded compaction capacity is
+    restored (the memory-footprint rung climbs back)."""
+    plan = _plan(compact=True, capacity=128)
+    probe = _batches(1, rows=1024)[0]
+    storm = np.tile(_storm_row(plan, probe)[:, None], (1, 1024))
+
+    guard = GuardedSession(
+        build_session(plan),
+        _policy(validate_every=1, promote_after=2))
+    state = guard.init_state()
+    state, _ = guard.step(state, storm)
+    assert guard.session.plan.capacity is None      # lossless rung
+    for cols in _batches(3, rows=1024, seed=5):
+        state, _ = guard.step(state, cols)
+    assert guard.session.plan.capacity == 128
+    assert guard.health.promotes[0]["changes"] == {"capacity": "128"}
+
+
+def test_promotion_disabled_by_default():
+    """``promote_after=0`` (the default) keeps the pre-PR-10 semantics:
+    a degrade is permanent for the session's lifetime."""
+    holder: dict = {}
+    flaky = {"on": True}
+
+    def injector(i):
+        if flaky["on"] and holder["g"].session.plan.engine == "pallas":
+            raise RuntimeError("boom")
+
+    guard = GuardedSession(build_session(_plan(engine="pallas")),
+                           _policy(max_retries=1, validate_every=1),
+                           step_injector=injector)
+    holder["g"] = guard
+    state = guard.init_state()
+    batches = _batches(6, rows=1024)
+    state, _ = guard.step(state, batches[0])
+    flaky["on"] = False
+    for cols in batches[1:]:
+        state, _ = guard.step(state, cols)
+    assert guard.session.plan.engine == "jnp"
+    assert guard.health.promotes == []
+
+
+def test_health_snapshot_exports_rungs():
+    """The admission server's export: counters + the CURRENT ladder
+    rungs + degrade depth, JSON-serializable as-is."""
+    import json
+
+    guard = GuardedSession(build_session(_plan(compact=True, capacity=64)),
+                           _policy())
+    snap = guard.health_snapshot()
+    assert snap["rungs"] == {"engine": "jnp", "skip_tier": "off",
+                             "compact": True, "capacity": "64",
+                             "degrade_depth": 0}
+    assert snap["n_promotes"] == 0 and snap["promotes"] == []
+    json.dumps(snap)
+
+
 # =========================================================== guard: rollback
 def test_rollback_restores_from_ring():
     """Corrupt the live state in flight (validate_every=1 catches it at

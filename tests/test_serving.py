@@ -1,0 +1,297 @@
+"""Admission server: queued ingest → adaptive guardrail gate → packed
+prefill/decode slots (``src/repro/serving/``).
+
+Pins the subsystem's contracts:
+
+  * ADMISSION DETERMINISM — the queued, threaded server produces an
+    admit/reject sequence and final OrderState bit-identical to a
+    synchronous reference loop over the same seeded traffic; queuing
+    changes latency, never decisions.
+  * ACCOUNTING — bounded queues block, never drop: every ingested
+    request gets exactly one RequestResult with a reason code.
+  * DRAIN — a stop request (incl. a real SIGTERM through
+    GracefulShutdown) stops ingest, finishes gating what's queued, lets
+    in-flight slots decode to completion, and flushes a restorable
+    final checkpoint + health line.
+  * TRAFFIC — the drifting 3-phase mix is counter-pure, restartable,
+    and actually drifts (selectivities shift per phase).
+"""
+
+import json
+import os
+import signal
+import threading
+import types
+
+import numpy as np
+import pytest
+
+from repro.core import FilterPlan, OrderingConfig, build_session
+from repro.data.stream import RequestStream
+from repro.runtime import (DataFaultInjector, GracefulShutdown,
+                           GuardedSession, GuardPolicy)
+from repro.serving import (REASON_ADMITTED, REASON_QUARANTINED,
+                           REASON_REJECTED, AdmissionServer, ServerConfig,
+                           SimExecutor, TrafficConfig, TrafficGenerator,
+                           guardrail_chain, phase_of, synchronous_reference)
+from repro.serving.traffic import (COL_ABUSE, COL_ALLOW, COL_PROMPT_LEN,
+                                   gen_requests)
+
+
+def _plan():
+    return FilterPlan(
+        predicates=guardrail_chain(),
+        ordering=OrderingConfig(collect_rate=4, calculate_rate=256,
+                                momentum=0.3))
+
+
+def _traffic(seed=3, phase_requests=256):
+    return TrafficConfig(seed=seed, phase_requests=phase_requests)
+
+
+def _stream(tcfg, requests, batch):
+    return RequestStream(TrafficGenerator(tcfg).gen, total_rows=requests,
+                         batch_rows=batch)
+
+
+def _blob_arrays_equal(a: dict, b: dict) -> bool:
+    aa, bb = a["arrays"], b["arrays"]
+    return set(aa) == set(bb) and all(
+        np.array_equal(np.asarray(aa[k]), np.asarray(bb[k])) for k in aa)
+
+
+def _check_accounting(report, reason_counts=True):
+    """Every ingested request answered exactly once, with a known reason."""
+    m = report.metrics
+    ids = [r.request_id for r in report.results]
+    assert len(ids) == len(set(ids)), "a request was answered twice"
+    assert len(ids) == m["requests"], \
+        f"{m['requests']} ingested but {len(ids)} answered"
+    assert all(r.reason in (REASON_ADMITTED, REASON_REJECTED,
+                            REASON_QUARANTINED) for r in report.results)
+    if reason_counts:
+        by = {REASON_ADMITTED: 0, REASON_REJECTED: 0, REASON_QUARANTINED: 0}
+        for r in report.results:
+            by[r.reason] += 1
+        assert by[REASON_ADMITTED] == m["admitted"] == m["completed"]
+        assert by[REASON_REJECTED] == m["rejected"]
+        assert by[REASON_QUARANTINED] == m["quarantined"]
+
+
+# ================================================================= traffic
+def test_traffic_counter_pure():
+    cfg = _traffic()
+    a = gen_requests(cfg, 5, 5 * 64, 64)
+    b = gen_requests(cfg, 5, 5 * 64, 64)
+    np.testing.assert_array_equal(a, b)
+    c = gen_requests(cfg, 6, 6 * 64, 64)
+    assert not np.array_equal(a, c)
+
+
+def test_traffic_three_phases_drift():
+    """The mix schedule must MOVE the chain's selectivities: allowlist
+    fraction jumps in the enterprise phase, abuse/length failures spike
+    in the storm phase — the drift the adaptive ordering exists for."""
+    cfg = _traffic(phase_requests=4096)
+    rows = {p: gen_requests(cfg, p, p * 4096, 4096) for p in range(3)}
+    allow = {p: (rows[p][COL_ALLOW] > 0.5).mean() for p in rows}
+    abuse = {p: (rows[p][COL_ABUSE] >= 0.92).mean() for p in rows}
+    long_ = {p: (rows[p][COL_PROMPT_LEN] >= 900.0).mean() for p in rows}
+    assert allow[2] > allow[0] + 0.3, allow
+    assert abuse[1] > abuse[0] + 0.1, abuse
+    assert long_[1] > long_[0] + 0.15, long_
+    assert phase_of(cfg, 100) == 0 and phase_of(cfg, 5000) == 1 \
+        and phase_of(cfg, 9000) == 2
+
+
+def test_traffic_users_persistent():
+    """Allowlist membership hangs off the user id hash, not the draw:
+    the same user id always carries the same membership bit."""
+    from repro.serving.traffic import gen_requests_with_users
+
+    cfg = _traffic()
+    seen: dict[int, float] = {}
+    for b in range(8):
+        feats, users = gen_requests_with_users(cfg, b, b * 128, 128)
+        for uid, bit in zip(users.tolist(), feats[COL_ALLOW].tolist()):
+            assert seen.setdefault(uid, bit) == bit, \
+                f"user {uid} changed allowlist membership"
+
+
+def test_request_stream_restartable():
+    cfg = _traffic()
+    s1 = _stream(cfg, 8 * 64, 64)
+    it = iter(s1)
+    for _ in range(3):
+        next(it)
+    snap = s1.state()
+    rest1 = [rb.columns for rb in it]
+    s2 = _stream(cfg, 8 * 64, 64)
+    s2.restore(snap)
+    rest2 = [rb.columns for rb in s2]
+    assert len(rest1) == len(rest2) == 5
+    for a, b in zip(rest1, rest2):
+        np.testing.assert_array_equal(a, b)
+
+
+# ====================================================== server determinism
+def test_server_matches_synchronous_reference():
+    """THE acceptance pin: the queued, threaded, slot-packed server's
+    admitted set and final OrderState are bit-identical to a synchronous
+    loop over the same seeded traffic — and a second server run is
+    bit-identical to the first (thread timing never leaks in)."""
+    tcfg = _traffic()
+    plan = _plan()
+
+    def run_server():
+        server = AdmissionServer(
+            build_session(plan), _stream(tcfg, 768, 64),
+            ServerConfig(num_slots=4, queue_depth=4))
+        return server.run(), server
+
+    report1, _ = run_server()
+    report2, _ = run_server()
+    ref_session = build_session(plan)
+    ref_state, ref_masks = synchronous_reference(
+        ref_session, _stream(tcfg, 768, 64))
+
+    for rep in (report1, report2):
+        assert set(rep.masks) == set(ref_masks)
+        for b in ref_masks:
+            np.testing.assert_array_equal(rep.masks[b], ref_masks[b])
+        assert _blob_arrays_equal(rep.state_blob,
+                                  ref_session.save_state(ref_state))
+        _check_accounting(rep)
+
+    # reason codes agree with the oracle masks, request by request
+    by_id = report1.results_by_id()
+    for b, mask in ref_masks.items():
+        for off, bit in enumerate(mask.tolist()):
+            want = REASON_ADMITTED if bit else REASON_REJECTED
+            assert by_id[b * 64 + off].reason == want
+    # admitted requests actually decoded in a slot
+    assert all(r.decode_steps >= 1 for r in report1.results
+               if r.reason == REASON_ADMITTED)
+    assert report1.metrics["slot_occupancy"] > 0.0
+    assert report1.metrics["admission_latency_ms"]["p99"] >= \
+        report1.metrics["admission_latency_ms"]["p50"] >= 0.0
+    assert report1.metrics["guard"] is None  # unguarded gate: key present
+
+
+def test_guarded_server_quarantines_with_reason_codes():
+    """A poisoned batch is answered immediately with QUARANTINED for
+    every row, GuardHealth flows into the metrics snapshot, and every
+    clean batch stays bit-identical to a fault-free reference."""
+    tcfg = _traffic()
+    plan = _plan()
+    hook = DataFaultInjector(poison_at=(2,))
+    server = AdmissionServer(
+        GuardedSession(build_session(plan)), _stream(tcfg, 512, 64),
+        ServerConfig(num_slots=4), batch_hook=hook)
+    report = server.run()
+    _check_accounting(report)
+    by_id = report.results_by_id()
+    for off in range(64):
+        assert by_id[2 * 64 + off].reason == REASON_QUARANTINED
+    assert not report.masks[2].any()
+    g = report.metrics["guard"]
+    assert g["quarantined"] == 1 and g["steps"] == 7
+    assert g["rungs"]["engine"] == "jnp"
+    assert report.health_line and "quarantined=1" in report.health_line
+
+    _, clean_masks = synchronous_reference(
+        build_session(plan), _stream(tcfg, 512, 64))
+    for b, mask in clean_masks.items():
+        if b != 2:
+            np.testing.assert_array_equal(report.masks[b], mask)
+
+
+# ============================================================ backpressure
+def test_backpressure_bounded_queues_never_drop():
+    """Tight queues + slow slots: ingest must BLOCK (bounded memory) and
+    every request still gets exactly one answer."""
+    tcfg = _traffic()
+    server = AdmissionServer(
+        build_session(_plan()), _stream(tcfg, 20 * 16, 16),
+        ServerConfig(num_slots=2, queue_depth=1, max_backlog=4),
+        executor=SimExecutor(max_decode_steps=4, tick_s=0.001))
+    report = server.run()
+    _check_accounting(report)
+    assert report.metrics["requests"] == 20 * 16
+    assert len(server._backlog) == 0
+    assert server.request_q.empty() and server.result_q.empty()
+
+
+# =================================================================== drain
+def test_drain_on_stop_finishes_inflight():
+    """A stop request raised mid-run (from the ingest thread's pure
+    batch hook, deterministically at batch 3): ingest stops, everything
+    already queued is still gated and answered, in-flight slots finish,
+    and the flushed final checkpoint restores into a fresh session."""
+    tcfg = _traffic()
+    plan = _plan()
+    stop = types.SimpleNamespace(requested=False)
+
+    def hook(b, cols):
+        if b == 3:
+            stop.requested = True
+        return cols
+
+    total = 64 * 32
+    server = AdmissionServer(
+        build_session(plan), _stream(tcfg, total, 32),
+        ServerConfig(num_slots=4, queue_depth=4), batch_hook=hook)
+    report = server.run(stop=stop)
+    assert report.drained
+    _check_accounting(report)
+    assert 0 < report.metrics["requests"] < total, \
+        "stop must land mid-stream (ingest neither empty nor complete)"
+    assert all(r.decode_steps >= 1 for r in report.results
+               if r.reason == REASON_ADMITTED), "in-flight slots must finish"
+    restored = build_session(plan).restore_state(report.state_blob)
+    assert build_session(plan).validate_state(restored)
+
+
+def test_sigterm_drains_and_flushes():
+    """A real SIGTERM through GracefulShutdown mid-run: the server
+    drains (slots finish, accounting exact) and flushes the final
+    checkpoint + health line instead of dying with work in flight."""
+    tcfg = _traffic()
+    server = AdmissionServer(
+        GuardedSession(build_session(_plan())),
+        _stream(tcfg, 256 * 16, 16),
+        ServerConfig(num_slots=4, queue_depth=4),
+        executor=SimExecutor(max_decode_steps=8, tick_s=0.002))
+    timer = threading.Timer(
+        0.3, lambda: os.kill(os.getpid(), signal.SIGTERM))
+    stop = GracefulShutdown()
+    with stop:
+        timer.start()
+        report = server.run(stop=stop)
+    timer.cancel()
+    assert stop.requested and report.drained
+    _check_accounting(report)
+    assert report.metrics["requests"] < 256 * 16
+    assert report.state_blob is not None and report.health_line is not None
+
+
+# ================================================================= the CLI
+def test_serve_cli_smoke(tmp_path):
+    """The BENCH_serve.json contract: the smoke CLI runs the 3-phase
+    mix through the queued server, the parity gate passes, and the
+    payload carries requests/sec + p99 admission latency + GuardHealth
+    counters (the CI bench-serve job's schema)."""
+    from repro.launch import serve
+
+    out = tmp_path / "BENCH_serve.json"
+    rc = serve.main(["--smoke", "--requests", "192", "--batch", "32",
+                     "--slots", "4", "--bench-out", str(out),
+                     "--gate-rps", "1", "--gate-p99-ms", "600000"])
+    assert rc == 0
+    payload = json.loads(out.read_text())
+    assert payload["parity"]["ok"] is True
+    assert payload["requests_per_sec"] > 0
+    assert payload["admission_latency_ms"]["p99"] >= 0
+    assert payload["guard"]["steps"] == 6
+    assert set(payload["config"]["phases_seen"]) == {0, 1, 2}
+    assert payload["decided"] == payload["requests"] == 192
